@@ -1,0 +1,68 @@
+"""Microbenchmarks for the compute hot-spots (CPU wall-clock, interpret-mode
+kernels excluded — Pallas interpret is a correctness vehicle, not a timing
+one; kernel *tiling* quality is assessed via the roofline, not wall time).
+
+Compares the XLA backends that execute in production on this host:
+  contingency:  segment-sum vs one-hot-matmul (the MXU strategy in XLA form)
+  attention:    chunked-flash XLA vs naive S² (small shapes)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import candidate_contingency
+from repro.models.attention import _flash_xla
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def contingency_backends(nc=32, g=65536, n_bins=256, m=8) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    packed = jnp.asarray(rng.integers(0, n_bins, (nc, g)), jnp.int32)
+    d = jnp.asarray(rng.integers(0, m, (g,)), jnp.int32)
+    w = jnp.asarray(rng.random(g), jnp.float32)
+    valid = jnp.ones((g,), bool)
+    rows = []
+    for backend in ("segment", "onehot"):
+        fn = jax.jit(lambda p, dd, ww, vv, b=backend: candidate_contingency(
+            p, dd, ww, vv, n_bins=n_bins, m=m, backend=b))
+        dt = _time(fn, packed, d, w, valid)
+        rows.append({"backend": backend, "us_per_call": round(dt * 1e6, 1),
+                     "candidates": nc, "granules": g})
+    return rows
+
+
+def attention_impls(b=1, h=8, s=1024, dh=64) -> List[Dict]:
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    rows = []
+    flash = jax.jit(lambda q_, k_, v_: _flash_xla(
+        q_, k_, v_, causal=True, window=None, scale=dh ** -0.5,
+        q_chunk=256, kv_chunk=256))
+    naive = jax.jit(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=True))
+    for name, fn in (("flash_xla_chunked", flash), ("naive_s2", naive)):
+        dt = _time(fn, q, k, v, reps=3)
+        rows.append({"impl": name, "ms_per_call": round(dt * 1e3, 2),
+                     "shape": f"b{b} h{h} s{s} d{dh}"})
+    return rows
+
+
+ALL_BENCHES = {
+    "contingency_backends": contingency_backends,
+    "attention_impls": attention_impls,
+}

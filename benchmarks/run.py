@@ -1,0 +1,49 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (paper_tables.py) + kernel micro-benches.
+Pass table names to run a subset: ``python -m benchmarks.run table_12 fig_9``.
+Results are printed as aligned text and mirrored to benchmarks/results.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def _print_rows(name: str, rows) -> None:
+    print(f"\n=== {name} ===")
+    if not rows:
+        print("(empty)")
+        return
+    keys = list(rows[0].keys())
+    widths = {k: max(len(str(k)), *(len(str(r.get(k, ''))) for r in rows)) for k in keys}
+    print("  ".join(str(k).ljust(widths[k]) for k in keys))
+    for r in rows:
+        print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
+
+
+def main() -> None:
+    from .kernel_bench import ALL_BENCHES
+    from .paper_tables import ALL_TABLES
+
+    wanted = sys.argv[1:] or None
+    jobs = {**ALL_TABLES, **ALL_BENCHES}
+    if wanted:
+        jobs = {k: v for k, v in jobs.items() if k in wanted}
+
+    results = {}
+    for name, fn in jobs.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        results[name] = rows
+        _print_rows(name, rows)
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+
+    with open("benchmarks/results.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print("\nwritten: benchmarks/results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: PLAR feature selection feeding model training.
+
+    PYTHONPATH=src python examples/feature_selected_training.py
+
+The paper positions attribute reduction as the preprocessing step of a
+learning pipeline.  This example runs the full loop the framework is built
+around:
+
+  1. generate a high-dimensional tabular stream (gisette-shaped);
+  2. run PLAR (SCE) to find the reduct;
+  3. train a small tabular transformer on (a) all attributes and (b) the
+     reduct only — same budget;
+  4. show the reduct model matches (or beats) full-attribute accuracy with a
+     fraction of the input width — the paper's "reduce uncertainty &
+     complexity without losing discernibility" claim, measured end-to-end.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plar_reduce
+from repro.data import FeatureSelectedStream, TabularStream
+from repro.models.config import ArchConfig
+from repro.models import build_model
+from repro.train import AdamW, constant_schedule, make_train_step
+
+
+def tabular_lm(n_attrs: int, v_max: int, n_classes: int) -> ArchConfig:
+    """Tiny decoder treating each attribute as one token position."""
+    return ArchConfig(
+        name=f"tab-{n_attrs}", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        vocab=max(v_max, n_classes) + 1, param_dtype="float32",
+        compute_dtype="float32", remat=False, fsdp=False,
+    )
+
+
+def train_tabular(x: np.ndarray, d: np.ndarray, steps: int = 60, batch: int = 64):
+    n, a = x.shape
+    cfg = tabular_lm(a, int(x.max()), int(d.max()) + 1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=constant_schedule(3e-3), weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(model, opt))
+    state = {"params": params, "opt_m": opt.init(params).m,
+             "opt_v": opt.init(params).v, "opt_step": jnp.zeros((), jnp.int32)}
+
+    rng = np.random.default_rng(0)
+    split = int(0.9 * n)
+    for step in range(steps):
+        idx = rng.integers(0, split, batch)
+        toks = x[idx]
+        # predict the class token at the last position
+        labels = np.concatenate([toks[:, 1:], d[idx][:, None]], axis=1)
+        state, metrics = step_fn(state, {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(labels, jnp.int32),
+        })
+    # eval: accuracy of the class prediction at the last position
+    toks = jnp.asarray(x[split:], jnp.int32)
+    logits = model.forward({"params": state["params"]}["params"], {"tokens": toks})
+    pred = np.asarray(jnp.argmax(logits[:, -1], -1))
+    return float((pred == d[split:]).mean()), float(metrics["loss"])
+
+
+def main():
+    stream = TabularStream(n_rows=3000, n_attrs=48, v_max=4, n_dec=2,
+                           redundancy=0.5, relevance=3, noise=0.02, seed=7)
+    x, d = stream.table()
+    print(f"table: {x.shape}, classes={int(d.max()) + 1}")
+
+    r = plar_reduce(x, d, delta="SCE", max_features=12)
+    print(f"PLAR reduct: {r.reduct} ({len(r.reduct)}/{x.shape[1]} attributes)")
+
+    xr, dr = FeatureSelectedStream(stream, r.reduct).table()
+    acc_full, loss_full = train_tabular(x, d)
+    acc_red, loss_red = train_tabular(xr, dr)
+    print(f"full attributes : acc={acc_full:.3f} (train loss {loss_full:.3f}) "
+          f"width={x.shape[1]}")
+    print(f"PLAR reduct     : acc={acc_red:.3f} (train loss {loss_red:.3f}) "
+          f"width={xr.shape[1]}")
+    print("→ reduct keeps the signal at "
+          f"{xr.shape[1] / x.shape[1]:.0%} of the input width")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""PLAR core: GrC granularity representation + unified evaluation + reduction."""
+from .granularity import (
+    Granularity,
+    build_granularity,
+    compact_ids,
+    pack_ids,
+    presence_bitmap,
+    ids_from_presence,
+    regranulate,
+    row_fingerprints,
+)
+from .measures import MEASURES, evaluate, sig_inner, sig_outer, theta_rows
+from .plan import candidate_contingency, contingency_from_ids, ids_by_sort, subset_ids
+from .reduction import (
+    ReductionResult,
+    fspa_reduce,
+    har_reduce,
+    plar_reduce,
+    raw_granularity,
+)
+
+__all__ = [
+    "Granularity",
+    "build_granularity",
+    "regranulate",
+    "pack_ids",
+    "compact_ids",
+    "presence_bitmap",
+    "ids_from_presence",
+    "row_fingerprints",
+    "MEASURES",
+    "evaluate",
+    "theta_rows",
+    "sig_inner",
+    "sig_outer",
+    "candidate_contingency",
+    "contingency_from_ids",
+    "ids_by_sort",
+    "subset_ids",
+    "ReductionResult",
+    "plar_reduce",
+    "har_reduce",
+    "fspa_reduce",
+    "raw_granularity",
+]

@@ -1,0 +1,344 @@
+"""Distributed PLAR: the paper's MDP (model + data parallelism) on a mesh.
+
+Mapping (DESIGN.md §2) — this *is* the paper's architecture, re-expressed:
+
+    Spark construct                     mesh construct
+    -----------------------------------------------------------------
+    RDD granule partitions, .cache()    granule arrays sharded over ('pod','data'), HBM-resident
+    MP process pool over candidates     candidate axis sharded over 'model'
+    map (re-key onto B∪D)               packed ids  p = r·V + x[:,a]   (local)
+    reduceByKey                         per-shard contingency + psum over data axes
+    driver sum()                        θ rows summed on-shard (redundantly, post-psum)
+    driver argmax                       host argmin over the gathered [A] thetas
+
+Two collective schedules for the contingency merge (the §Perf knob):
+
+* ``all_reduce``      — paper-faithful DP: every data shard psums the full
+  ``[nc_loc, K·V, m]`` contingency, then reduces θ locally.
+* ``reduce_scatter``  — beyond-paper: each shard reduces θ over its *slice*
+  of contingency rows (θ is row-separable, Eq. 8!) and a scalar psum merges.
+  Halves collective bytes and distributes the θ flops; exact because
+  Θ(D|B) = Σ_i θ(S_i) commutes with row partitioning.
+
+Correctness notes:
+* Per-shard granularity tables may hold duplicate keys across shards — the
+  contingency sum is key-additive, so dedup is an optional memory
+  optimization (``dedup_granules``), never a correctness requirement.
+* Id compaction uses the presence-bitmap/psum construction whose
+  shard-consistency is proven by ``test_compact_ids_commute_with_merge``.
+* The attribute core (one-time, paper lines 3–8) is computed on gathered
+  granule tables — G ≪ N after GrC init; the greedy hot loop is fully
+  distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache, partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import measures
+from .granularity import build_granularity
+from .plan import contingency_from_ids
+from .reduction import ReductionResult, _core_inner_thetas, _next_pow2
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _n_data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in _data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _n_model_shards(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+# ---------------------------------------------------------------------------
+# sharded evaluation / advance steps
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
+               collective: str, *, table_dtype: str = "int32",
+               fused_pack: bool = False):
+    """shard_map: candidates over 'model' × granules over data → thetas [A].
+
+    §Perf knobs: ``table_dtype="int8"`` stores the granule table x/d in one
+    byte per cell (v_max < 128), quartering the dominant column-read traffic;
+    ``fused_pack`` folds the id-packing arithmetic into the per-candidate
+    segment expression instead of materializing ``packed [A_loc, G_loc]``.
+    """
+    daxes = _data_axes(mesh)
+    nd = _n_data_shards(mesh)
+
+    def local(cand_cols, r_ids, x, d, w, valid, n):
+        # cand_cols [A_loc]; r_ids/d/w/valid [G_loc]; x [G_loc, A]
+        d32 = d.astype(jnp.int32)
+        w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+
+        if fused_pack:
+            def one(col):
+                x_col = jnp.take(x, col, axis=1).astype(jnp.int32)
+                seg = jnp.where(valid, (r_ids * v_max + x_col) * m + d32,
+                                n_bins * m)
+                return jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1]
+
+            cont = jax.vmap(one)(cand_cols).reshape(-1, n_bins, m)
+        else:
+            x_cand = jnp.take(x, cand_cols, axis=1).T.astype(jnp.int32)
+            packed = r_ids[None, :] * v_max + x_cand              # [A_loc, G_loc]
+
+            def one(p):
+                seg = jnp.where(valid, p * m + d32, n_bins * m)
+                return jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1]
+
+            cont = jax.vmap(one)(packed).reshape(-1, n_bins, m)   # [A_loc, nb, m]
+        if collective == "reduce_scatter" and nd > 1 and n_bins % nd == 0:
+            # θ is row-separable: scatter rows over data shards, θ locally,
+            # scalar psum.  Half the bytes of the all_reduce schedule.
+            cont_slice = jax.lax.psum_scatter(
+                cont, daxes, scatter_dimension=1, tiled=True
+            )                                                     # [A_loc, nb/nd, m]
+            theta_part = measures.theta_rows(delta, cont_slice, n).sum(-1)
+            return jax.lax.psum(theta_part, daxes)
+        cont = jax.lax.psum(cont, daxes)
+        return measures.evaluate(delta, cont, n)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P("model"), P(daxes), P(daxes, None), P(daxes), P(daxes),
+                  P(daxes), P()),
+        out_specs=P("model"),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+@lru_cache(maxsize=None)
+def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
+    """shard_map: fold the winning attribute into the shared reduction state."""
+    daxes = _data_axes(mesh)
+
+    def local(a_col, r_ids, d, w, valid, n):
+        packed = r_ids * v_max + a_col
+        p_safe = jnp.where(valid, packed, 0)
+        presence = jnp.zeros((n_bins,), jnp.int32).at[p_safe].max(valid.astype(jnp.int32))
+        presence = jax.lax.psum(presence, daxes)                  # global agreement
+        presence = (presence > 0).astype(jnp.int32)
+        rank = jnp.cumsum(presence) - presence
+        new_ids = jnp.where(valid, rank[p_safe], 0)
+        k_new = presence.sum()
+
+        w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+        seg = jnp.where(valid, new_ids * m + d, n_bins * m)
+        cont = jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1]
+        cont = jax.lax.psum(cont.reshape(n_bins, m), daxes)
+        theta = measures.evaluate(delta, cont, n)
+        return new_ids, k_new, theta
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(daxes), P(daxes), P(daxes), P(daxes), P(daxes), P()),
+        out_specs=(P(daxes), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# distributed GrC build
+# ---------------------------------------------------------------------------
+
+
+def shard_decision_table(x: np.ndarray, d: np.ndarray, mesh: Mesh):
+    """Place the raw table row-sharded over the data axes (the HDFS load)."""
+    nd = _n_data_shards(mesh)
+    n, a = x.shape
+    n_pad = -(-n // nd) * nd
+    xp = np.zeros((n_pad, a), np.int32)
+    dp = np.zeros((n_pad,), np.int32)
+    vp = np.zeros((n_pad,), bool)
+    xp[:n], dp[:n], vp[:n] = x, d, True
+    daxes = _data_axes(mesh)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    return (
+        jax.device_put(xp, sh(daxes, None)),
+        jax.device_put(dp, sh(daxes)),
+        jax.device_put(vp, sh(daxes)),
+    )
+
+
+@lru_cache(maxsize=None)
+def _grc_build_step(mesh: Mesh, n_dec: int, v_max: int, capacity: int):
+    """Per-shard GrC initialization (paper lines 1–2).  No cross-shard dedup:
+    duplicate keys across shards are weight-additive (module docstring)."""
+    daxes = _data_axes(mesh)
+
+    def local(x, d, valid):
+        g = build_granularity(
+            x, d, n_dec=n_dec, v_max=v_max,
+            valid=valid, exact=True, capacity=capacity,
+        )
+        return g.x, g.d, g.w, g.valid, jax.lax.psum(g.num, daxes), jax.lax.psum(
+            g.n_total, daxes)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(daxes, None), P(daxes), P(daxes)),
+        out_specs=(P(daxes, None), P(daxes), P(daxes), P(daxes), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def plar_reduce_distributed(
+    x,
+    d,
+    mesh: Mesh,
+    *,
+    delta: str = "PR",
+    n_dec: Optional[int] = None,
+    v_max: Optional[int] = None,
+    eps: float = 0.0,
+    tol: float = 1e-6,
+    tie_tol: float = 1e-5,
+    max_features: Optional[int] = None,
+    collective: str = "all_reduce",     # | "reduce_scatter" (§Perf)
+    compute_core: bool = True,
+    grc_init: bool = True,
+) -> ReductionResult:
+    """PLAR Algorithm 2 on a ('pod','data','model') mesh.  See module doc."""
+    t0 = time.perf_counter()
+    x = np.asarray(x, np.int32)
+    d = np.asarray(d, np.int32)
+    if n_dec is None:
+        n_dec = int(d.max()) + 1
+    if v_max is None:
+        v_max = int(x.max()) + 1
+    n_rows, A = x.shape
+    nd = _n_data_shards(mesh)
+    nm = _n_model_shards(mesh)
+
+    # --- GrC initialization (distributed, cached in device memory) ---
+    xs, ds, vs = shard_decision_table(x, d, mesh)
+    cap_per_shard = xs.shape[0] // nd
+    if grc_init:
+        build = _grc_build_step(mesh, n_dec, v_max, cap_per_shard)
+        gx, gd, gw, gvalid, g_num, n_total = build(xs, ds, vs)
+    else:
+        gx, gd = xs, ds
+        gw = jax.device_put(
+            np.ones((xs.shape[0],), np.int32), NamedSharding(mesh, P(_data_axes(mesh))))
+        gvalid = vs
+        n_total = jnp.int32(n_rows)
+    n = jnp.float32(n_rows)
+
+    cap = gx.shape[0]
+    daxes = _data_axes(mesh)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+
+    # --- Θ(D|C) (stop target) + core, on gathered granules (one-time) ---
+    gx_h = np.asarray(gx)
+    gd_h = np.asarray(gd)
+    gw_h = np.asarray(gw)
+    gv_h = np.asarray(gvalid)
+    from .granularity import Granularity
+    gran_h = Granularity(
+        x=jnp.asarray(gx_h), d=jnp.asarray(gd_h), w=jnp.asarray(gw_h),
+        valid=jnp.asarray(gv_h), num=jnp.int32(int(gv_h.sum())),
+        n_total=jnp.int32(n_rows), n_attrs=A, n_dec=n_dec, v_max=v_max,
+    )
+    from .plan import subset_ids
+    ids_c, _ = subset_ids(gran_h, jnp.arange(A, dtype=jnp.int32), exact=True)
+    cont_c = contingency_from_ids(ids_c, gran_h.d, gran_h.w, gran_h.valid,
+                                  n_bins=cap, m=n_dec)
+    theta_full = float(measures.evaluate(delta, cont_c, n))
+
+    core: List[int] = []
+    n_evals = 0
+    if compute_core:
+        inner = _core_inner_thetas(gran_h, delta, exact=True)
+        core = [int(a) for a in range(A) if inner[a] - theta_full > eps + tie_tol]
+        n_evals += A
+
+    # --- distributed greedy loop state ---
+    r_ids = jax.device_put(np.zeros((cap,), np.int32), sh(daxes))
+    k = 1
+    reduct: List[int] = []
+    theta_hist: List[float] = []
+    per_iter_s: List[float] = []
+
+    def bins_for(k_):
+        return _next_pow2(max(k_, 1)) * v_max
+
+    for a in core:
+        adv = _advance_step(mesh, delta, bins_for(k), n_dec, v_max)
+        a_col = jnp.take(gx, a, axis=1)
+        r_ids, k_new, theta_r = adv(a_col, r_ids, gd, gw, gvalid, n)
+        k = int(k_new)
+        reduct.append(a)
+        theta_hist.append(float(theta_r))
+
+    theta_r = theta_hist[-1] if theta_hist else float("inf")
+    remaining = [a for a in range(A) if a not in reduct]
+    iterations = 0
+
+    while remaining and theta_r > theta_full + tol:
+        if max_features is not None and len(reduct) >= max_features:
+            break
+        it0 = time.perf_counter()
+        n_bins = bins_for(k)
+        # candidate axis padded to the model-shard multiple (the MP level)
+        a_pad = -(-len(remaining) // nm) * nm
+        cand = np.full((a_pad,), remaining[-1], np.int32)
+        cand[: len(remaining)] = remaining
+        cand_dev = jax.device_put(cand, sh("model"))
+
+        ev = _eval_step(mesh, delta, n_bins, n_dec, v_max, collective)
+        thetas = np.asarray(ev(cand_dev, r_ids, gx, gd, gw, gvalid, n), np.float64)
+        thetas = thetas[: len(remaining)]
+        n_evals += len(remaining)
+
+        best = measures.argmin_with_ties(thetas, tie_tol)
+        a_opt = remaining[best]
+
+        adv = _advance_step(mesh, delta, n_bins, n_dec, v_max)
+        a_col = jnp.take(gx, a_opt, axis=1)
+        r_ids, k_new, theta_new = adv(a_col, r_ids, gd, gw, gvalid, n)
+        k = int(k_new)
+        theta_r = float(theta_new)
+        reduct.append(a_opt)
+        remaining.remove(a_opt)
+        theta_hist.append(theta_r)
+        iterations += 1
+        per_iter_s.append(time.perf_counter() - it0)
+
+    return ReductionResult(
+        reduct=reduct,
+        core=core,
+        theta_full=theta_full,
+        theta_history=theta_hist,
+        iterations=iterations,
+        n_evaluations=n_evals,
+        elapsed_s=time.perf_counter() - t0,
+        per_iteration_s=per_iter_s,
+    )

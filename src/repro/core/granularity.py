@@ -1,0 +1,281 @@
+"""GrC-based initialization: the granularity representation of a decision table.
+
+The paper (PLAR §3.3) converts the decision table ``S = (U, C ∪ D)`` into the
+granularity representation ``G^(C∪D) = {(E⃗, |E|)}`` — distinct rows with
+multiplicities — once, and caches it in distributed memory.  All later work
+(evaluating ``Θ(D|B)`` for candidate subsets ``B``) operates on granules.
+
+TPU/XLA adaptation (static shapes, no host round-trips):
+
+* Rows are fingerprinted with a *linear* polynomial hash
+  ``h(row) = Σ_j mix32(x[:, j] ⊕ seed_j) · m_j (mod 2³²)`` with two independent
+  seeds.  Linearity lets us add/remove one column's contribution in O(1) — used
+  by the attribute-core computation, where the paper re-maps from scratch.
+* "unique rows" is a lexsort + adjacent-compare + ``segment_sum`` — the
+  reduceByKey of the GrC build.  ``exact=True`` sorts the actual columns
+  (collision-free); ``exact=False`` sorts the 64-bit fingerprint pair only
+  (collision probability < G²/2⁻⁶⁴, used for very wide tables such as SDSS).
+* The output table is padded to a static capacity with a validity mask; ``num``
+  carries the live granule count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Granularity",
+    "build_granularity",
+    "column_terms",
+    "row_fingerprints",
+    "regranulate",
+    "pack_ids",
+    "compact_ids",
+    "project_columns",
+]
+
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def _mix32(v: jnp.ndarray) -> jnp.ndarray:
+    """SplitMix-style 32-bit finalizer (uint32 in, uint32 out)."""
+    v = v.astype(jnp.uint32)
+    v = v ^ (v >> 16)
+    v = v * jnp.uint32(0x7FEB352D)
+    v = v ^ (v >> 15)
+    v = v * jnp.uint32(0x846CA68B)
+    v = v ^ (v >> 16)
+    return v
+
+
+def _column_seeds(n_cols: int, seed: int) -> np.ndarray:
+    """Deterministic per-column (seed, multiplier) pairs, host-side."""
+    idx = np.arange(n_cols, dtype=np.uint64)
+    mask = np.uint64(0xFFFFFFFF)
+    col_seed = (idx * np.uint64(_GOLDEN) + np.uint64(seed) * np.uint64(0x85EBCA6B)) & mask
+    mult = (((col_seed ^ (col_seed >> np.uint64(13))) * np.uint64(0xC2B2AE35)) & mask) | np.uint64(1)
+    return np.stack([col_seed, mult], axis=0).astype(np.uint32)  # [2, n_cols]
+
+
+def column_terms(x_col: jnp.ndarray, col_index: int, n_cols: int, seed: int) -> jnp.ndarray:
+    """Hash term contributed by one column: mix32(v ⊕ seed_j) · m_j  (uint32).
+
+    ``row_fingerprints(x) == Σ_j column_terms(x[:, j], j)`` — the linear-sketch
+    property used to *remove* a column from a fingerprint in O(1).
+    """
+    seeds = _column_seeds(n_cols, seed)
+    cs = jnp.uint32(seeds[0, col_index])
+    mult = jnp.uint32(seeds[1, col_index])
+    return _mix32(x_col.astype(jnp.uint32) ^ cs) * mult
+
+
+def row_fingerprints(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Linear polynomial fingerprint of each row (uint32), vectorized over columns."""
+    n_cols = x.shape[-1]
+    seeds = _column_seeds(n_cols, seed)
+    cs = jnp.asarray(seeds[0])  # [A]
+    mult = jnp.asarray(seeds[1])  # [A]
+    terms = _mix32(x.astype(jnp.uint32) ^ cs[None, :]) * mult[None, :]
+    return terms.sum(axis=-1, dtype=jnp.uint32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Granularity:
+    """Padded granularity representation ``G^(A)`` of a decision table.
+
+    Attributes:
+      x:     [cap, A] int32 — representative feature vector of each granule.
+      d:     [cap]    int32 — decision label of each granule.
+      w:     [cap]    int32 — multiplicity |E| (0 for padding slots).
+      valid: [cap]    bool  — slot liveness mask.
+      num:   scalar  int32 — number of live granules G.
+      n_total: scalar int32 — |U| = Σ w.
+    Static metadata (aux): n_attrs, n_dec (m), v_max (max categorical code + 1).
+    """
+
+    x: jnp.ndarray
+    d: jnp.ndarray
+    w: jnp.ndarray
+    valid: jnp.ndarray
+    num: jnp.ndarray
+    n_total: jnp.ndarray
+    n_attrs: int
+    n_dec: int
+    v_max: int
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    def tree_flatten(self):
+        children = (self.x, self.d, self.w, self.valid, self.num, self.n_total)
+        aux = (self.n_attrs, self.n_dec, self.v_max)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _sort_keys(
+    x: jnp.ndarray,
+    d: jnp.ndarray,
+    valid: jnp.ndarray,
+    exact: bool,
+    seed: int,
+):
+    """Sort keys grouping equal rows; invalid rows sort to the end."""
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    h1 = jnp.where(valid, row_fingerprints(x, seed), sentinel)
+    h2 = jnp.where(valid, row_fingerprints(x, seed + 7919), sentinel)
+    du = jnp.where(valid, d.astype(jnp.uint32), sentinel)
+    if exact:
+        # Primary: fingerprints (cheap bucketing); within buckets, the actual
+        # columns break hash collisions, making the grouping collision-free.
+        cols = [jnp.where(valid, x[:, j].astype(jnp.uint32), sentinel) for j in range(x.shape[1])]
+        keys = tuple(cols[::-1]) + (du, h2, h1)  # last key = primary
+    else:
+        keys = (du, h2, h1)
+    order = jnp.lexsort(keys)
+    return order, (h1, h2, du)
+
+
+def _boundaries(
+    x_s: jnp.ndarray,
+    d_s: jnp.ndarray,
+    valid_s: jnp.ndarray,
+    hashes_s: Sequence[jnp.ndarray],
+    exact: bool,
+) -> jnp.ndarray:
+    if exact:
+        neq = (x_s[1:] != x_s[:-1]).any(axis=-1) | (d_s[1:] != d_s[:-1])
+    else:
+        neq = jnp.zeros(x_s.shape[0] - 1, dtype=bool)
+        for h in hashes_s:
+            neq = neq | (h[1:] != h[:-1])
+    first = jnp.ones((1,), dtype=bool)
+    b = jnp.concatenate([first, neq])
+    return b & valid_s
+
+
+@partial(jax.jit, static_argnames=("n_dec", "v_max", "exact", "seed", "capacity"))
+def build_granularity(
+    x: jnp.ndarray,
+    d: jnp.ndarray,
+    *,
+    n_dec: int,
+    v_max: int,
+    w: Optional[jnp.ndarray] = None,
+    valid: Optional[jnp.ndarray] = None,
+    exact: bool = True,
+    seed: int = 0,
+    capacity: Optional[int] = None,
+) -> Granularity:
+    """GrC initialization: build ``G^(C∪D)`` from (possibly pre-weighted) rows.
+
+    Accepting input weights makes this the shard-merge step too: re-granulating
+    a concatenation of per-shard granule tables merges duplicate keys exactly
+    (the reduceByKey of the distributed build).
+    """
+    n, n_attrs = x.shape
+    cap = capacity or n
+    if w is None:
+        w = jnp.ones((n,), dtype=jnp.int32)
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    w = jnp.where(valid, w, 0)
+
+    order, _ = _sort_keys(x, d, valid, exact, seed)
+    x_s, d_s, w_s, valid_s = x[order], d[order], w[order], valid[order]
+    h1s = row_fingerprints(x_s, seed)
+    h2s = row_fingerprints(x_s, seed + 7919)
+    b = _boundaries(x_s, d_s, valid_s, (h1s, h2s, d_s.astype(jnp.uint32)), exact)
+
+    ids = jnp.cumsum(b.astype(jnp.int32)) - 1  # [-1 for leading invalid-only case]
+    ids = jnp.clip(ids, 0, cap - 1)
+    num = b.sum().astype(jnp.int32)
+
+    w_g = jax.ops.segment_sum(w_s, ids, num_segments=cap)
+    # Representative rows: every row in a segment shares the key, any write wins.
+    x_g = jnp.zeros((cap, n_attrs), x.dtype).at[ids].set(jnp.where(valid_s[:, None], x_s, 0))
+    d_g = jnp.zeros((cap,), d.dtype).at[ids].set(jnp.where(valid_s, d_s, 0))
+    valid_g = jnp.arange(cap) < num
+
+    return Granularity(
+        x=x_g,
+        d=d_g,
+        w=jnp.where(valid_g, w_g, 0),
+        valid=valid_g,
+        num=num,
+        n_total=w.sum().astype(jnp.int32),
+        n_attrs=n_attrs,
+        n_dec=n_dec,
+        v_max=v_max,
+    )
+
+
+def regranulate(gran: Granularity, cols: jnp.ndarray, *, exact: bool = True, seed: int = 0) -> Granularity:
+    """Coarsen ``G^(C∪D)`` onto the column subset ``cols`` (Corollary 3.3).
+
+    ``cols`` is a static index array; the result's ``x`` holds only those columns.
+    """
+    x_sub = gran.x[:, cols]
+    return build_granularity(
+        x_sub,
+        gran.d,
+        n_dec=gran.n_dec,
+        v_max=gran.v_max,
+        w=gran.w,
+        valid=gran.valid,
+        exact=exact,
+        seed=seed,
+        capacity=gran.capacity,
+    )
+
+
+def project_columns(gran: Granularity, cols: Sequence[int]) -> Granularity:
+    """Alias of :func:`regranulate` taking a Python column list."""
+    return regranulate(gran, jnp.asarray(list(cols), dtype=jnp.int32))
+
+
+def pack_ids(r_ids: jnp.ndarray, x_col: jnp.ndarray, v_max: int) -> jnp.ndarray:
+    """Refine class ids with one attribute: ``p = r·V + v``  (Corollary 3.4).
+
+    Exact: two granules share ``p`` iff they share both the current class and
+    the candidate attribute value.  Range: ``[0, K·V)``.
+    """
+    return r_ids * v_max + x_col
+
+
+def presence_bitmap(p: jnp.ndarray, valid: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """0/1 bitmap of which packed ids occur among valid slots (int32 [n_bins])."""
+    p_safe = jnp.where(valid, p, 0)
+    return jnp.zeros((n_bins,), jnp.int32).at[p_safe].max(valid.astype(jnp.int32))
+
+
+def ids_from_presence(presence: jnp.ndarray, p: jnp.ndarray, valid: jnp.ndarray):
+    """Dense renumbering given a (possibly psum-merged) presence bitmap."""
+    presence = (presence > 0).astype(jnp.int32)
+    rank = jnp.cumsum(presence) - presence  # exclusive prefix count
+    p_safe = jnp.where(valid, p, 0)
+    new_ids = jnp.where(valid, rank[p_safe], 0)
+    return new_ids, presence.sum()
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def compact_ids(p: jnp.ndarray, valid: jnp.ndarray, n_bins: int):
+    """Renumber sparse packed ids to dense ``[0, K_new)`` via presence bitmap.
+
+    Sort-free: presence = scatter-max of validity, rank = cumsum.  The bitmap
+    commutes with ``psum`` over data shards, so all shards agree on the global
+    numbering without a gather (§3.1 of DESIGN.md).
+    """
+    presence = presence_bitmap(p, valid, n_bins)
+    new_ids, k_new = ids_from_presence(presence, p, valid)
+    return new_ids, k_new, presence

@@ -1,0 +1,120 @@
+r"""The four significance measures (PR, SCE, LCE, CCE) of PLAR Table 1/2.
+
+Every measure factors over equivalence classes (paper §3.2):
+
+    Θ(D|B) = Σ_i θ(S_i),     S_i = (E_i, D)
+
+and every θ needs only the *contingency row* of the class: the counts
+``|D_ij| = |E_i ∩ D_j|`` (and their sum ``|E_i|``).  This module computes θ/Θ
+from a contingency table ``cont[..., K, m]`` (float32 counts, padding rows are
+all-zero and contribute exactly 0 to every measure).
+
+Sign convention (paper, below Table 1): ``Θ_PR(D|B) ≝ -γ_B(D)``, so for all
+four measures *smaller Θ is better* and both significances are non-negative:
+
+    Sig_inner(a, B) = Θ(D|B\{a}) - Θ(D|B)
+    Sig_outer(a, B) = Θ(D|B)     - Θ(D|B∪{a})
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+__all__ = ["MEASURES", "theta_rows", "evaluate", "sig_inner", "sig_outer"]
+
+
+def _row_sums(cont: jnp.ndarray) -> jnp.ndarray:
+    return cont.sum(axis=-1)
+
+
+def _theta_pr(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """θ_PR = -|E_i|·1[|E_i/D|=1] / |U|  (class is pure → counts toward POS)."""
+    e = _row_sums(cont)
+    pure = (cont.max(axis=-1) == e) & (e > 0)
+    return -(e * pure.astype(cont.dtype)) / n
+
+
+def _theta_sce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """θ_SCE = -(1/|U|) Σ_j |D_ij| log(|D_ij|/|E_i|), with 0·log0 = 0."""
+    e = _row_sums(cont)
+    safe_c = jnp.where(cont > 0, cont, 1.0)
+    safe_e = jnp.where(e > 0, e, 1.0)
+    logs = jnp.log(safe_c) - jnp.log(safe_e)[..., None]
+    return -(jnp.where(cont > 0, cont * logs, 0.0)).sum(axis=-1) / n
+
+
+def _theta_lce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """θ_LCE = Σ_j |D_ij|·(|E_i| - |D_ij|) / |U|²."""
+    e = _row_sums(cont)
+    return (cont * (e[..., None] - cont)).sum(axis=-1) / (n * n)
+
+
+def _theta_cce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """θ_CCE = [|E_i|²(|E_i|-1) - Σ_j |D_ij|²(|D_ij|-1)] / (n²(n-1)).
+
+    Follows Definition 2.9 literally: (|E|/n)·C²_|E|/C²_n = e²(e-1)/(n²(n-1)).
+    (The paper's Table 2 denominator ``|U|·C²_|U|`` is 2× this — a factor that
+    cancels in all significance comparisons; we keep the Def-2.9 scale so the
+    brute-force oracle and the decomposed path agree bit-for-bit.)
+    """
+    e = _row_sums(cont)
+    denom = jnp.maximum(n * n * (n - 1.0), 1.0)
+    pos = e * e * jnp.maximum(e - 1.0, 0.0)
+    neg = (cont * cont * jnp.maximum(cont - 1.0, 0.0)).sum(axis=-1)
+    return (pos - neg) / denom
+
+
+MEASURES: Dict[str, Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = {
+    "PR": _theta_pr,
+    "SCE": _theta_sce,
+    "LCE": _theta_lce,
+    "CCE": _theta_cce,
+}
+
+
+def theta_rows(delta: str, cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Per-class sub-evaluation θ(S_i): cont [..., K, m] → [..., K]."""
+    cont = cont.astype(jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    return MEASURES[delta](cont, n)
+
+
+def evaluate(delta: str, cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Θ(D|B) = Σ_i θ(S_i): cont [..., K, m] → [...] (the paper's sum() action).
+
+    PR is computed as a single integer-exact count sum followed by one
+    division, so Θ_PR is bit-identical across summation orders (paths/shards)
+    whenever |U| < 2²⁴ — which makes tie-breaking deterministic.
+    """
+    if delta == "PR":
+        cont = cont.astype(jnp.float32)
+        n = jnp.asarray(n, jnp.float32)
+        e = cont.sum(axis=-1)
+        pure = (cont.max(axis=-1) == e) & (e > 0)
+        pos = (e * pure.astype(cont.dtype)).sum(axis=-1)
+        return -pos / n
+    return theta_rows(delta, cont, n).sum(axis=-1)
+
+
+def argmin_with_ties(values, tol: float = 1e-5) -> int:
+    """Lowest index whose value is within ``tol`` of the minimum.
+
+    Greedy selection must break Θ ties identically across float32 summation
+    orders (incremental vs spark vs distributed) and vs the float64 oracle;
+    a tolerance band + lowest-index rule does that.
+    """
+    import numpy as np
+
+    v = np.asarray(values, np.float64)
+    return int(np.nonzero(v <= v.min() + tol)[0][0])
+
+
+def sig_inner(theta_without: jnp.ndarray, theta_with: jnp.ndarray) -> jnp.ndarray:
+    r"""Sig^inner = Θ(D|B\{a}) - Θ(D|B)."""
+    return theta_without - theta_with
+
+
+def sig_outer(theta_base: jnp.ndarray, theta_added: jnp.ndarray) -> jnp.ndarray:
+    """Sig^outer = Θ(D|B) - Θ(D|B∪{a})."""
+    return theta_base - theta_added

@@ -1,0 +1,148 @@
+"""Evaluation planning: how Θ(D|B) gets computed for batches of candidates.
+
+Two modes (kept separate so §Perf can report the paper-faithful baseline and
+the beyond-paper optimized version independently):
+
+* ``spark`` — the direct transliteration of PLAR Algorithm 2: each candidate
+  re-keys every granule from scratch (``map``) and groups by sorted key
+  (``reduceByKey``).  Cost per candidate per iteration: O(G log G) sort.
+* ``incremental`` — beyond-paper: exact class ids of ``U/R`` are maintained
+  across iterations, so evaluating ``R ∪ {a}`` is a *pack* (``r·V + v``, O(G))
+  followed by a contingency reduction into ``K·V`` exact bins — no sort in the
+  loop, and the reduction is a one-hot contraction the MXU executes natively.
+
+Contingency backends (all bit-equivalent, asserted by tests):
+
+* ``segment`` — ``jax.ops.segment_sum`` (best on CPU; XLA scatter-add on TPU).
+* ``onehot``  — chunked one-hot matmul (the MXU strategy expressed in XLA).
+* ``pallas``  — the fused Pallas kernel (``repro.kernels.contingency``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .granularity import Granularity, row_fingerprints
+
+__all__ = [
+    "ids_by_sort",
+    "subset_ids",
+    "candidate_contingency",
+    "contingency_from_ids",
+    "theta_for_ids",
+]
+
+
+def ids_by_sort(keys: Sequence[jnp.ndarray], valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact dense ids for arbitrary sort keys (the reduceByKey grouping).
+
+    ``keys[-1]`` is the primary sort key.  Returns ids in *original* order and
+    the number of distinct keys K.  Invalid slots get id 0 and do not count.
+    """
+    n = valid.shape[0]
+    sentineled = []
+    for k in keys:
+        ku = k.astype(jnp.uint32)
+        sentineled.append(jnp.where(valid, ku, jnp.uint32(0xFFFFFFFF)))
+    order = jnp.lexsort(tuple(sentineled))
+    valid_s = valid[order]
+    neq = jnp.zeros((n - 1,), bool)
+    for k in sentineled:
+        ks = k[order]
+        neq = neq | (ks[1:] != ks[:-1])
+    b = jnp.concatenate([jnp.ones((1,), bool), neq]) & valid_s
+    ids_sorted = jnp.cumsum(b.astype(jnp.int32)) - 1
+    ids_sorted = jnp.maximum(ids_sorted, 0)
+    ids = jnp.zeros((n,), jnp.int32).at[order].set(jnp.where(valid_s, ids_sorted, 0))
+    return ids, b.sum().astype(jnp.int32)
+
+
+def subset_ids(gran: Granularity, cols: jnp.ndarray, *, exact: bool, seed: int = 0):
+    """Class ids of ``U/B`` for the column subset B (dynamic index array)."""
+    x_sub = gran.x[:, cols]
+    if exact:
+        keys = [x_sub[:, j] for j in range(x_sub.shape[1])][::-1]
+    else:
+        keys = [row_fingerprints(x_sub, seed + 7919), row_fingerprints(x_sub, seed)]
+    return ids_by_sort(keys, gran.valid)
+
+
+# ---------------------------------------------------------------------------
+# Contingency backends: packed ids [nc, G] → counts [nc, n_bins, m]
+# ---------------------------------------------------------------------------
+
+
+def _cont_segment(packed, d, w, valid, n_bins, m):
+    w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+
+    def one(p):
+        seg = jnp.where(valid, p * m + d, n_bins * m)  # padding → dropped bin
+        return jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1].reshape(n_bins, m)
+
+    return jax.vmap(one)(packed)
+
+
+def _cont_onehot(packed, d, w, valid, n_bins, m, *, bin_chunk: int = 512):
+    """One-hot contraction, chunked over bins — mirrors the TPU MXU strategy."""
+    w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+    wd = w_[:, None] * jax.nn.one_hot(d, m, dtype=jnp.float32)  # [G, m]
+    n_chunks = -(-n_bins // bin_chunk)
+    pad_bins = n_chunks * bin_chunk
+
+    def chunk(c, _):
+        base = c * bin_chunk
+        bins = base + jnp.arange(bin_chunk)
+        onehot = (packed[:, :, None] == bins[None, None, :]).astype(jnp.float32)  # [nc, G, BK]
+        return c + 1, jnp.einsum("cgk,gm->ckm", onehot, wd)
+
+    _, chunks = jax.lax.scan(chunk, 0, None, length=n_chunks)  # [n_chunks, nc, BK, m]
+    cont = jnp.moveaxis(chunks, 0, 1).reshape(packed.shape[0], pad_bins, m)
+    return cont[:, :n_bins, :]
+
+
+def _cont_pallas(packed, d, w, valid, n_bins, m, *, interpret: bool):
+    from repro.kernels.contingency.ops import contingency as _kernel
+
+    w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+    return _kernel(packed, d, w_, n_bins=n_bins, n_dec=m, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_bins", "m", "backend", "interpret"))
+def candidate_contingency(
+    packed: jnp.ndarray,
+    d: jnp.ndarray,
+    w: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    n_bins: int,
+    m: int,
+    backend: str = "segment",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """counts[c, k, j] = Σ_g w_g · 1[packed[c,g] = k] · 1[d_g = j].
+
+    The paper's REDUCE phase for a *batch* of candidates at once (MP × DP).
+    """
+    if backend == "segment":
+        return _cont_segment(packed, d, w, valid, n_bins, m)
+    if backend == "onehot":
+        return _cont_onehot(packed, d, w, valid, n_bins, m)
+    if backend == "pallas":
+        return _cont_pallas(packed, d, w, valid, n_bins, m, interpret=interpret)
+    raise ValueError(f"unknown contingency backend: {backend}")
+
+
+def contingency_from_ids(ids, d, w, valid, *, n_bins: int, m: int) -> jnp.ndarray:
+    """Single-subset contingency [n_bins, m] (used for Θ(D|R), Θ(D|C), core)."""
+    return candidate_contingency(ids[None, :], d, w, valid, n_bins=n_bins, m=m)[0]
+
+
+def theta_for_ids(delta: str, ids, gran: Granularity, *, n_bins: int):
+    """Θ(D|B) given exact class ids of U/B."""
+    from . import measures
+
+    cont = contingency_from_ids(ids, gran.d, gran.w, gran.valid, n_bins=n_bins, m=gran.n_dec)
+    return measures.evaluate(delta, cont, gran.n_total)

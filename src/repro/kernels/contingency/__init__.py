@@ -1,0 +1,4 @@
+from .ops import contingency
+from .ref import contingency_ref
+
+__all__ = ["contingency", "contingency_ref"]

@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the contingency kernel.
+
+Handles the TPU lane-width padding of the decision axis (M → multiple of 128)
+and unpadding of the result; callers see the logical ``[nc, n_bins, n_dec]``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BG, DEFAULT_BK, contingency_pallas
+
+LANE = 128
+
+
+@partial(jax.jit, static_argnames=("n_bins", "n_dec", "bk", "bg", "interpret"))
+def contingency(
+    packed: jnp.ndarray,   # [nc, G] int32
+    d: jnp.ndarray,        # [G] int32
+    w: jnp.ndarray,        # [G] float32 (already masked: 0 on padding slots)
+    *,
+    n_bins: int,
+    n_dec: int,
+    bk: int = DEFAULT_BK,
+    bg: int = DEFAULT_BG,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """counts[c, k, j] = Σ_g w_g · 1[packed[c,g]=k] · 1[d_g=j]."""
+    m_pad = -(-n_dec // LANE) * LANE
+    wd = w[:, None] * (d[:, None] == jnp.arange(m_pad)[None, :]).astype(jnp.float32)
+    out = contingency_pallas(packed, wd, n_bins=n_bins, bk=bk, bg=bg, interpret=interpret)
+    return out[:, :, :n_dec]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the batched contingency reduction.
+
+``counts[c, k, j] = Σ_g w_g · 1[packed[c, g] = k] · 1[d_g = j]``
+
+This is the paper's REDUCE phase (reduceByKey over ``(E⃗_B, E⃗_D)`` keys) after
+id-packing has turned keys into compact integers — expressed as the dense
+one-hot contraction that defines the Pallas kernel's semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def contingency_ref(
+    packed: jnp.ndarray,  # [nc, G] int32, values in [0, n_bins)
+    d: jnp.ndarray,       # [G]    int32, values in [0, n_dec)
+    w: jnp.ndarray,       # [G]    float32 (0 for padding granules)
+    *,
+    n_bins: int,
+    n_dec: int,
+) -> jnp.ndarray:
+    """Dense one-hot reference: O(nc · G · n_bins) flops, exact in f32."""
+    onehot_k = (packed[..., None] == jnp.arange(n_bins)[None, None, :]).astype(jnp.float32)
+    wd = w[:, None] * (d[:, None] == jnp.arange(n_dec)[None, :]).astype(jnp.float32)
+    return jnp.einsum("cgk,gm->ckm", onehot_k, wd)

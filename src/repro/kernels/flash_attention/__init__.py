@@ -1,0 +1,5 @@
+from .kernel import flash_attention
+from .ops import flash_attention_diff, mha
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_diff", "mha", "attention_ref"]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for fused (flash) attention with GQA / causal / window."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Skv, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Skv, Dh]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dense softmax attention; kv heads broadcast over query-head groups."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+
+    # Query position i attends to key position j (aligned to sequence ends:
+    # query i sits at absolute position skv - sq + i, the decode convention).
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import rwkv6_scan
+from .ops import rwkv6, rwkv6_diff
+from .ref import rwkv6_ref
+
+__all__ = ["rwkv6_scan", "rwkv6", "rwkv6_diff", "rwkv6_ref"]

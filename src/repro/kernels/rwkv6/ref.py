@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) token-shift recurrence.
+
+Per head, with state ``S ∈ R^{Dk × Dv}`` and data-dependent per-channel decay
+``w_t ∈ (0, 1)^{Dk}`` and bonus ``u ∈ R^{Dk}``:
+
+    o_t = r_tᵀ (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+This is the arXiv:2404.05892 recurrence (eq. 19–22) in its per-head matrix
+form.  The oracle runs a plain ``lax.scan`` in f64-free f32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,  # [B, H, T, D]
+    k: jnp.ndarray,  # [B, H, T, D]
+    v: jnp.ndarray,  # [B, H, T, D]
+    w: jnp.ndarray,  # [B, H, T, D] decay in (0, 1)
+    u: jnp.ndarray,  # [H, D] bonus
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, D, D]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, h, t, d = r.shape
+    if init_state is None:
+        init_state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def head(r_h, k_h, v_h, w_h, u_h, s0):
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp
+            out = r_t @ (s + jnp.outer(u_h * k_t, v_t))
+            s_new = w_t[:, None] * s + jnp.outer(k_t, v_t)
+            return s_new, out
+
+        s_fin, o = jax.lax.scan(step, s0, (r_h, k_h, v_h, w_h))
+        return o, s_fin
+
+    f = jax.vmap(jax.vmap(head, in_axes=(0, 0, 0, 0, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
+    o, s_fin = f(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32), init_state,
+    )
+    return o.astype(r.dtype), s_fin

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at backend
+init, and the production meshes need 512 placeholder devices.
+
+Per cell this driver produces:
+  * the compile proof — ``jax.jit(step).lower(**input_specs).compile()``
+    succeeds on the scanned production config;
+  * ``memory_analysis()`` — per-device bytes (argument/output/temp);
+  * roofline inputs — FLOPs / bytes / collective wire bytes, via the
+    1-period/2-period unrolled probe extrapolation (see roofline.py for why
+    the scanned artifact alone cannot give loop-correct costs).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out runs/dryrun
+    python -m repro.launch.dryrun --plar --mesh multi       # the paper's own workload
+
+``--all`` spawns one subprocess per cell (compiler arenas do not shrink;
+isolation keeps the 80-compile sweep bounded) and skips cells whose output
+JSON already exists.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _build_mesh(kind: str):
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, skip_probes: bool = False,
+             setup_kw=None, overrides=None) -> dict:
+    import jax
+    from repro.configs import get_config, shape_applies
+    from repro.distributed.api import use_mesh
+    from repro.launch import roofline as rl
+    from repro.launch.specs import make_setup, n_periods_of, probe_config
+    from repro.models.config import SHAPES
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not shape_applies(cfg, shape):
+        record["status"] = "skipped"
+        record["reason"] = "long_500k requires sub-quadratic attention (DESIGN.md §4)"
+        return record
+
+    mesh = _build_mesh(mesh_kind)
+    n_chips = mesh.devices.size
+    record["chips"] = int(n_chips)
+    setup_kw = setup_kw or {}
+
+    def lower_compile(config, collect_text: bool):
+        fn, shapes, shardings, donate = make_setup(config, shape_name, mesh, **setup_kw)
+        with use_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+            lowered = jitted.lower(*shapes)
+            compiled = lowered.compile()
+        out = {
+            "cost": compiled.cost_analysis(),
+            "memory": compiled.memory_analysis(),
+            "text": compiled.as_text() if collect_text else None,
+        }
+        return out
+
+    # 1) compile proof on the full scanned config
+    t0 = time.time()
+    full = lower_compile(cfg, collect_text=False)
+    record["compile_s"] = round(time.time() - t0, 1)
+    ma = full["memory"]
+    record["memory_per_device"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "total_hbm_bytes": ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+    }
+    record["scanned_cost"] = {
+        "flops_per_device": full["cost"].get("flops", 0.0),
+        "bytes_per_device": full["cost"].get("bytes accessed", 0.0),
+    }
+
+    if skip_probes:
+        record["status"] = "ok"
+        return record
+
+    # 2) probe configs for loop-correct costs.
+    #    FLOPs: naive-attention probes (every flop visible, no inner loops).
+    #    Bytes + collectives: production-path probes (the chunked/flash
+    #    implementation whose HBM traffic we actually ship).
+    n_periods = n_periods_of(cfg)
+    t0 = time.time()
+    p1n = lower_compile(probe_config(cfg, 1), collect_text=False)
+    p2n = lower_compile(probe_config(cfg, 2), collect_text=False)
+    p1f = lower_compile(
+        dataclasses.replace(probe_config(cfg, 1), attn_naive=False), collect_text=True)
+    p2f = lower_compile(
+        dataclasses.replace(probe_config(cfg, 2), attn_naive=False), collect_text=True)
+    record["probe_s"] = round(time.time() - t0, 1)
+
+    flops = rl.extrapolate(p1n["cost"].get("flops", 0.0),
+                           p2n["cost"].get("flops", 0.0), n_periods)
+    bytes_ = rl.extrapolate(p1f["cost"].get("bytes accessed", 0.0),
+                            p2f["cost"].get("bytes accessed", 0.0), n_periods)
+    conv = rl.extrapolate(rl.parse_convert_bytes(p1f["text"]),
+                          rl.parse_convert_bytes(p2f["text"]), n_periods)
+    bytes_corrected = max(bytes_ - 2.0 * conv, bytes_ * 0.1)
+    c1 = rl.parse_collectives(p1f["text"])
+    c2 = rl.parse_collectives(p2f["text"])
+    wire = rl.extrapolate_collectives(c1, c2, n_periods)
+    wire_total = sum(wire.values())
+
+    record["flops_per_device"] = flops
+    record["bytes_per_device"] = bytes_
+    record["convert_bytes_per_device"] = conv
+    record["bytes_per_device_tpu_corrected"] = bytes_corrected
+    record["collectives"] = {
+        "p1": c1.as_dict(), "p2": c2.as_dict(),
+        "extrapolated_wire_bytes": wire,
+        "total_wire_bytes_per_device": wire_total,
+    }
+    record["roofline"] = rl.roofline_terms(flops, bytes_, wire_total)
+    record["roofline_tpu_corrected"] = rl.roofline_terms(
+        flops, bytes_corrected, wire_total)
+    mf = rl.model_flops(cfg, shape)
+    record["model_flops_total"] = mf
+    record["model_flops_per_device"] = mf / n_chips
+    record["useful_flops_ratio"] = (mf / n_chips) / flops if flops else None
+    record["status"] = "ok"
+    return record
+
+
+def run_plar_cell(mesh_kind: str, *, collective: str = "all_reduce",
+                  table_dtype: str = "int32", fused_pack: bool = False) -> dict:
+    """The paper's own workload: one PLAR greedy-loop iteration at SDSS scale
+    (320k granules × 5201 candidate attributes), lowered on the production
+    mesh: candidates over 'model', granules over ('pod','data')."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import _eval_step, _advance_step
+    from repro.launch import roofline as rl
+
+    mesh = _build_mesh(mesh_kind)
+    n_chips = mesh.devices.size
+    record = {"arch": "plar-sdss", "shape": "eval_iteration", "mesh": mesh_kind,
+              "chips": int(n_chips), "collective": collective,
+              "table_dtype": table_dtype, "fused_pack": fused_pack}
+
+    G, A, V, M = 327_680, 5_216, 8, 17    # SDSS-shaped, padded to shard multiples
+    K = 64                                 # reduct classes mid-loop
+    n_bins = K * V
+    ev = _eval_step(mesh, "SCE", n_bins, M, V, collective,
+                    table_dtype=table_dtype, fused_pack=fused_pack)
+    adv = _advance_step(mesh, "SCE", n_bins, M, V)
+
+    tdt = jnp.dtype(table_dtype)
+    shapes = (
+        jax.ShapeDtypeStruct((A,), jnp.int32),        # cand_cols
+        jax.ShapeDtypeStruct((G,), jnp.int32),        # r_ids
+        jax.ShapeDtypeStruct((G, A), tdt),            # x
+        jax.ShapeDtypeStruct((G,), tdt),              # d
+        jax.ShapeDtypeStruct((G,), jnp.int32),        # w
+        jax.ShapeDtypeStruct((G,), jnp.bool_),        # valid
+        jax.ShapeDtypeStruct((), jnp.float32),        # n
+    )
+    t0 = time.time()
+    lowered = ev.lower(*shapes)
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    record["memory_per_device"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+    }
+    cost = compiled.cost_analysis()
+    flops = cost.get("flops", 0.0)
+    bytes_ = cost.get("bytes accessed", 0.0)
+    colls = rl.parse_collectives(compiled.as_text())
+    record["flops_per_device"] = flops
+    record["bytes_per_device"] = bytes_
+    record["collectives"] = colls.as_dict()
+    record["roofline"] = rl.roofline_terms(flops, bytes_, colls.total_wire_bytes)
+    # "useful work": the contingency scatter-adds — A·G adds of m-sized rows
+    record["model_flops_total"] = float(A) * G * 2
+    record["status"] = "ok"
+
+    # advance step must lower too (proves the full loop is mesh-coherent)
+    adv_shapes = (
+        jax.ShapeDtypeStruct((G,), jnp.int32),
+        jax.ShapeDtypeStruct((G,), jnp.int32),
+        jax.ShapeDtypeStruct((G,), jnp.int32),
+        jax.ShapeDtypeStruct((G,), jnp.int32),
+        jax.ShapeDtypeStruct((G,), jnp.bool_),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    adv.lower(*adv_shapes).compile()
+    record["advance_step"] = "ok"
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--plar", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default=None, help="suffix for perf-variant records")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig overrides, e.g. --override flash_bwd=True")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--collective", default="all_reduce",
+                    choices=["all_reduce", "reduce_scatter"])
+    ap.add_argument("--table-dtype", default="int32", choices=["int32", "int8"])
+    ap.add_argument("--fused-pack", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        from repro.configs import cells
+        jobs = [(a, s, m) for (a, s) in cells() for m in meshes]
+        jobs += [("plar-sdss", "eval_iteration", m) for m in meshes]
+        for arch, shape, mesh_kind in jobs:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {path} exists")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--mesh", mesh_kind, "--out", args.out]
+            cmd += ["--plar"] if arch == "plar-sdss" else ["--arch", arch, "--shape", shape]
+            print(f"[run ] {arch} × {shape} × {mesh_kind}", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                err = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "error", "stderr": r.stderr[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(err, f, indent=2)
+                print(f"[FAIL] {arch} × {shape} × {mesh_kind}", flush=True)
+            else:
+                print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "", flush=True)
+        return
+
+    suffix = f"__{args.tag}" if args.tag else ""
+    if args.plar:
+        try:
+            record = run_plar_cell(meshes[0], collective=args.collective,
+                                   table_dtype=args.table_dtype,
+                                   fused_pack=args.fused_pack)
+        except Exception:
+            record = {"arch": "plar-sdss", "shape": "eval_iteration",
+                      "mesh": meshes[0], "status": "error",
+                      "traceback": traceback.format_exc()[-4000:]}
+        path = os.path.join(
+            args.out, f"plar-sdss__eval_iteration__{meshes[0]}{suffix}.json")
+    else:
+        try:
+            setup_kw = ({"microbatches": args.microbatches}
+                        if args.microbatches > 1 and args.shape == "train_4k" else {})
+            record = run_cell(args.arch, args.shape, meshes[0],
+                              overrides=_parse_overrides(args.override),
+                              setup_kw=setup_kw)
+        except Exception:
+            record = {"arch": args.arch, "shape": args.shape, "mesh": meshes[0],
+                      "status": "error", "traceback": traceback.format_exc()[-4000:]}
+        path = os.path.join(
+            args.out, f"{args.arch}__{args.shape}__{meshes[0]}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=float)
+    ok = record.get("status")
+    rf = record.get("roofline", {})
+    print(f"{record['arch']} × {record['shape']} × {record['mesh']}: {ok} "
+          f"compile={record.get('compile_s')}s dominant={rf.get('dominant')}")
+    if record.get("status") == "error":
+        print(record.get("traceback", record.get("reason", ""))[-2000:], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

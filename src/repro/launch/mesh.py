@@ -1,0 +1,26 @@
+"""Production mesh construction (the brief's fixed topology).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (device count is locked at first backend init, so the dry-run
+must set XLA_FLAGS before any jax call — see dryrun.py lines 1–2).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=None):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape, axes = (n,), ("data",)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,70 @@
+"""Attribute-reduction launcher (the paper's CLI):
+
+    python -m repro.launch.reduce --dataset mushroom --delta SCE
+    python -m repro.launch.reduce --dataset sdss --delta PR --distributed --mesh 4,2
+
+``--distributed`` runs the mesh MDP implementation (requires the process to
+have been started with enough devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", required=True)
+    ap.add_argument("--delta", default="SCE", choices=["PR", "SCE", "LCE", "CCE"])
+    ap.add_argument("--max-rows", type=int, default=20000)
+    ap.add_argument("--max-attrs", type=int, default=64)
+    ap.add_argument("--max-features", type=int, default=None)
+    ap.add_argument("--mode", default="incremental", choices=["incremental", "spark"])
+    ap.add_argument("--mp-chunk", type=int, default=64)
+    ap.add_argument("--no-grc", action="store_true")
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--mesh", default="4,2", help="data,model (distributed)")
+    ap.add_argument("--collective", default="all_reduce",
+                    choices=["all_reduce", "reduce_scatter"])
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    from repro.data import scaled_paper_dataset
+
+    x, d = scaled_paper_dataset(args.dataset, max_rows=args.max_rows,
+                                max_attrs=args.max_attrs).table()
+
+    if args.distributed:
+        import jax
+        from repro.core.distributed import plar_reduce_distributed
+
+        shape = tuple(int(v) for v in args.mesh.split(","))
+        mesh = jax.make_mesh(shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        r = plar_reduce_distributed(x, d, mesh, delta=args.delta,
+                                    max_features=args.max_features,
+                                    collective=args.collective)
+    else:
+        from repro.core import plar_reduce
+
+        r = plar_reduce(x, d, delta=args.delta, mode=args.mode,
+                        mp_chunk=args.mp_chunk, grc_init=not args.no_grc,
+                        max_features=args.max_features)
+
+    out = {
+        "dataset": args.dataset, "delta": args.delta,
+        "table_shape": list(x.shape),
+        "reduct": r.reduct, "core": r.core,
+        "theta_full": r.theta_full, "iterations": r.iterations,
+        "n_evaluations": r.n_evaluations, "elapsed_s": round(r.elapsed_s, 3),
+    }
+    if args.json:
+        print(json.dumps(out, indent=2))
+    else:
+        for k, v in out.items():
+            print(f"{k:>14}: {v}")
+
+
+if __name__ == "__main__":
+    main()

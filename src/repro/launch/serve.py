@@ -1,0 +1,40 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--smoke]``."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
+                           cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8),
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    for r in engine.serve(reqs):
+        print(f"req {r.rid}: {r.output}  ({r.latency_s*1e3:.0f} ms)")
+
+
+if __name__ == "__main__":
+    main()

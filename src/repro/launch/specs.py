@@ -1,0 +1,163 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  One builder per step kind; each returns
+
+    (fn, arg_shapes: tuple, arg_shardings: tuple, donate: tuple[int])
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.api import BATCH_AXES, sharding_for, use_mesh
+from repro.models import build_model
+from repro.models.config import ArchConfig, SHAPES, ShapeConfig
+from repro.train import AdamW, constant_schedule, make_train_step
+
+BIG_PARAM_THRESHOLD = 50e9      # ≥: bf16 optimizer moments (HBM budget)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _batch_sharding(mesh: Mesh, batch_size: int, extra_dims: int):
+    """Batch sharded over (pod, data) when divisible, else replicated."""
+    n = 1
+    for a in BATCH_AXES:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    spec = P(BATCH_AXES, *([None] * extra_dims)) if batch_size % n == 0 \
+        else P(*([None] * (extra_dims + 1)))
+    return sharding_for(spec, mesh)
+
+
+def _train_batch(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    shapes: Dict[str, Any] = {}
+    shard: Dict[str, Any] = {}
+    if cfg.is_encdec:
+        dec = s // 4
+        shapes["frames"] = _sds((b, s, cfg.frontend_dim), "float32")
+        shapes["tokens"] = _sds((b, dec), "int32")
+        shapes["labels"] = _sds((b, dec), "int32")
+        shard["frames"] = _batch_sharding(mesh, b, 2)
+        shard["tokens"] = shard["labels"] = _batch_sharding(mesh, b, 1)
+        return shapes, shard
+    shapes["tokens"] = _sds((b, s), "int32")
+    shapes["labels"] = _sds((b, s), "int32")
+    shard["tokens"] = shard["labels"] = _batch_sharding(mesh, b, 1)
+    if cfg.frontend == "vision":
+        shapes["frontend_feats"] = _sds((b, cfg.frontend_tokens, cfg.frontend_dim), "float32")
+        shard["frontend_feats"] = _batch_sharding(mesh, b, 2)
+    return shapes, shard
+
+
+def moment_dtype_for(cfg: ArchConfig) -> str:
+    return "bfloat16" if cfg.param_count() >= BIG_PARAM_THRESHOLD else "float32"
+
+
+def make_train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     *, microbatches: int = 1):
+    model = build_model(cfg)
+    opt = AdamW(lr=constant_schedule(3e-4), moment_dtype=moment_dtype_for(cfg))
+    fn = make_train_step(model, opt, microbatches=microbatches)
+
+    with use_mesh(mesh):
+        pshapes = model.param_shapes()
+        psh = model.param_shardings(mesh)
+        mdt = jnp.dtype(moment_dtype_for(cfg))
+        mshapes = jax.tree.map(lambda sd: _sds(sd.shape, mdt), pshapes)
+        state_shapes = {"params": pshapes, "opt_m": mshapes, "opt_v": mshapes,
+                        "opt_step": _sds((), "int32")}
+        state_sh = {"params": psh, "opt_m": psh, "opt_v": psh,
+                    "opt_step": sharding_for(P(), mesh)}
+        batch_shapes, batch_sh = _train_batch(cfg, shape, mesh)
+    return fn, (state_shapes, batch_shapes), (state_sh, batch_sh), (0,)
+
+
+def make_prefill_setup(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    with use_mesh(mesh):
+        pshapes = model.param_shapes()
+        psh = model.param_shardings(mesh)
+        if cfg.is_encdec:
+            batch_shapes = {"frames": _sds((b, s, cfg.frontend_dim), "float32")}
+            batch_sh = {"frames": _batch_sharding(mesh, b, 2)}
+            fn = lambda params, batch: model.prefill(params, batch, cache_len=1024)
+        else:
+            batch_shapes = {"tokens": _sds((b, s), "int32")}
+            batch_sh = {"tokens": _batch_sharding(mesh, b, 1)}
+            if cfg.frontend == "vision":
+                batch_shapes["frontend_feats"] = _sds(
+                    (b, cfg.frontend_tokens, cfg.frontend_dim), "float32")
+                batch_sh["frontend_feats"] = _batch_sharding(mesh, b, 2)
+            fn = lambda params, batch: model.prefill(params, batch, cache_len=s)
+    return fn, (pshapes, batch_shapes), (psh, batch_sh), ()
+
+
+def _attn_cache_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    s = shape.seq_len
+    if cfg.window and s > cfg.window:
+        return cfg.window            # rolling-window cache (jamba long_500k)
+    return s
+
+
+def make_decode_setup(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    b = shape.global_batch
+    with use_mesh(mesh):
+        pshapes = model.param_shapes()
+        psh = model.param_shardings(mesh)
+        if cfg.is_encdec:
+            cache_shapes = model.cache_shapes(b, 1024, shape.seq_len)
+            cache_sh = model.cache_shardings(b, 1024, shape.seq_len, mesh)
+        else:
+            clen = _attn_cache_len(cfg, shape)
+            cache_shapes = model.cache_shapes(b, clen)
+            cache_sh = model.cache_shardings(b, clen, mesh)
+        tok_shapes = _sds((b, 1), "int32")
+        len_shapes = _sds((b,), "int32")
+        tok_sh = _batch_sharding(mesh, b, 1)
+        len_sh = _batch_sharding(mesh, b, 0)
+        fn = lambda params, cache, tokens, lengths: model.decode(
+            params, cache, tokens, lengths)
+    return (fn, (pshapes, cache_shapes, tok_shapes, len_shapes),
+            (psh, cache_sh, tok_sh, len_sh), (1,))
+
+
+def make_setup(cfg: ArchConfig, shape_name: str, mesh: Mesh, **kw):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_train_setup(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_setup(cfg, shape, mesh)
+    return make_decode_setup(cfg, shape, mesh)
+
+
+def probe_config(cfg: ArchConfig, n_periods: int) -> ArchConfig:
+    """Unrolled shallow clone for the cost-extrapolation probes."""
+    from repro.models.blocks import layer_pattern
+    if cfg.is_encdec:
+        return dataclasses.replace(
+            cfg, enc_layers=n_periods, dec_layers=n_periods,
+            n_layers=n_periods, scan_unroll=True, remat=False, attn_naive=True,
+        )
+    period = len(layer_pattern(cfg)[0])
+    return dataclasses.replace(
+        cfg, n_layers=period * n_periods, scan_unroll=True, remat=False,
+        attn_naive=True,
+    )
+
+
+def n_periods_of(cfg: ArchConfig) -> int:
+    from repro.models.blocks import layer_pattern
+    if cfg.is_encdec:
+        return cfg.enc_layers  # enc+dec scale together in probe_config
+    return layer_pattern(cfg)[1]

@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this process runs per host under the cluster scheduler
+(jax.distributed.initialize picks up the pod topology); on this container it
+drives the same Trainer on local devices.  ``--smoke`` trains the reduced
+config — the path CI exercises.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape as 'data,model' (requires enough devices)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import TokenStream
+    from repro.train import TrainConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.split(","))
+        names = ("data", "model")[: len(shape)]
+        mesh = jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+    tc = TrainConfig(
+        peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, microbatches=args.microbatches,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+    )
+    trainer = Trainer(cfg, tc, mesh=mesh)
+    trainer.install_preemption_handler()
+
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq_len,
+                         global_batch=args.global_batch)
+    data_fn = lambda step: {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+    state, history = trainer.fit(data_fn, steps=args.steps)
+    for h in history:
+        print(f"step {h['step']:>5}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.3f}  {h['sec_per_step']:.2f}s/step")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model substrate: configs, layers, and the two model families."""
+from .config import ArchConfig, ShapeConfig, SHAPES
+from .encdec import EncDecLM
+from .lm import CausalLM
+
+
+def build_model(cfg: ArchConfig):
+    return EncDecLM(cfg) if cfg.is_encdec else CausalLM(cfg)
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "CausalLM", "EncDecLM", "build_model"]

@@ -1,0 +1,475 @@
+"""GQA attention: train/prefill (chunked flash), decode (KV cache), cross.
+
+Three execution paths share one parameter set:
+
+* ``full``    — self-attention over the whole sequence (train / prefill).
+  Uses the Pallas flash kernel on single-device runs; under an active mesh it
+  lowers the *chunked XLA* streaming-softmax equivalent (`_flash_xla`), which
+  GSPMD partitions with the same O(S) memory guarantee — never an S×S
+  materialization (prefill_32k would otherwise need 17 GB/device of scores).
+* ``decode``  — one (or few) new tokens against a padded KV cache, in-place
+  `dynamic_update_slice` at the per-sequence length.
+* ``cross``   — encoder-decoder cross attention against precomputed memory.
+
+Sharding: q/k/v/o weights are TP-sharded on the head axis; activations are
+constrained to P(batch, None, 'model', None) per head when the head count
+divides the mesh axis, otherwise the KV cache falls back to sequence
+sharding (flash-decode style) — see `kv_cache_spec`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import BATCH_AXES, FSDP_AXIS, TP_AXIS, active_mesh, axis_size, constrain
+from repro.kernels.flash_attention import flash_attention_diff
+from .layers import ParamDef, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg) -> Dict[str, ParamDef]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    defs = {
+        "wq": ParamDef((d, hq * hd), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wk": ParamDef((d, hkv * hd), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wv": ParamDef((d, hkv * hd), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wo": ParamDef((hq * hd, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones", dt)
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones", dt)
+    return defs
+
+
+def _maybe_head_axis(n_heads: int) -> Optional[str]:
+    """TP axis name if the head count divides the mesh's model axis."""
+    size = axis_size(TP_AXIS)
+    if size > 1 and n_heads % size == 0:
+        return TP_AXIS
+    return None
+
+
+def kv_cache_spec(cfg) -> P:
+    """[B, Hkv, S, Dh] cache: head-sharded when divisible, else seq-sharded."""
+    if _maybe_head_axis(cfg.n_kv_heads):
+        return P(BATCH_AXES, TP_AXIS, None, None)
+    return P(BATCH_AXES, None, TP_AXIS, None)
+
+
+def _rms(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def _project_qkv(params, x, positions, cfg, *, rope: bool = True):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = (x @ params["wq"].astype(cdt)).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"].astype(cdt)).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"].astype(cdt)).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    q = constrain(q, BATCH_AXES, _maybe_head_axis(hq), None, None)
+    kv_ax = _maybe_head_axis(hkv)
+    k = constrain(k, BATCH_AXES, kv_ax, None, None)
+    v = constrain(v, BATCH_AXES, kv_ax, None, None)
+    if cfg.qk_norm:
+        q = _rms(q, params["q_norm"], cfg.norm_eps)
+        k = _rms(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention in pure XLA (GSPMD-partitionable)
+# ---------------------------------------------------------------------------
+
+
+def _pad_qkv(q, k, v, qc, kc):
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    sq_pad = -(-sq // qc) * qc
+    skv_pad = -(-skv // kc) * kc
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    return q, k, v, sq_pad, skv_pad
+
+
+def _block_mask(qpos, kpos, skv, causal, window):
+    mask = (kpos < skv)[None, :]
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return mask
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "q_chunk", "kv_chunk")
+)
+def _flash_xla(
+    q, k, v, *, causal: bool, window: Optional[int], scale: float,
+    q_chunk: int = 1024, kv_chunk: int = 1024,
+):
+    """Streaming-softmax attention, O(S·chunk) memory, scan over kv blocks."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    sq_pad = -(-sq // qc) * qc
+    skv_pad = -(-skv // kc) * kc
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    kx = k.reshape(b, hkv, 1, skv_pad, dh)
+    vx = v.reshape(b, hkv, 1, skv_pad, dh)
+    qx = q.reshape(b, hkv, group, sq_pad, dh)
+
+    nq, nk = sq_pad // qc, skv_pad // kc
+
+    def q_block(iq):
+        q_i = jax.lax.dynamic_slice_in_dim(qx, iq * qc, qc, axis=3).astype(jnp.float32)
+        qpos = iq * qc + jnp.arange(qc) + (skv - sq)
+
+        def kv_step(carry, ik):
+            m_prev, l_prev, acc = carry
+            k_j = jax.lax.dynamic_slice_in_dim(kx, ik * kc, kc, axis=3).astype(jnp.float32)
+            v_j = jax.lax.dynamic_slice_in_dim(vx, ik * kc, kc, axis=3).astype(jnp.float32)
+            s_ij = jnp.einsum("bhgqd,bhgkd->bhgqk", q_i, k_j) * scale
+            kpos = ik * kc + jnp.arange(kc)
+            mask = (kpos < skv)[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m_prev, s_ij.max(-1))
+            alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+            p = jnp.exp(s_ij - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l_new = alpha * l_prev + p.sum(-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum("bhgqk,bhgkd->bhgqd", p, v_j)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, group, qc), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, group, qc), jnp.float32),
+            jnp.zeros((b, hkv, group, qc, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))               # [nq, b, hkv, g, qc, dh]
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, group, sq_pad, dh)
+    return out.reshape(b, hq, sq_pad, dh)[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# §Perf optimization: hand-written streaming backward (flash-attention bwd).
+#
+# The naive autodiff of `_flash_xla` saves every kv-step scan carry for the
+# backward pass — O(S²·dh/kc) per layer, the dominant temp-memory term in the
+# baseline dry-run (24.5 GB/device for tinyllama train_4k).  This custom_vjp
+# saves only (q, k, v, o, lse) and re-streams kv blocks in the backward,
+# restoring O(S·chunk) memory.  Enabled by ArchConfig.flash_bwd.
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_lse(q, k, v, causal, window, scale, qc, kc):
+    """Forward that also returns lse = m + log(l) per query (for the bwd)."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    q, k, v, sq_pad, skv_pad = _pad_qkv(q, k, v, qc, kc)
+    kx = k.reshape(b, hkv, 1, skv_pad, dh)
+    vx = v.reshape(b, hkv, 1, skv_pad, dh)
+    qx = q.reshape(b, hkv, group, sq_pad, dh)
+    nq, nk = sq_pad // qc, skv_pad // kc
+
+    def q_block(iq):
+        q_i = jax.lax.dynamic_slice_in_dim(qx, iq * qc, qc, axis=3).astype(jnp.float32)
+        qpos = iq * qc + jnp.arange(qc) + (skv - sq)
+
+        def kv_step(carry, ik):
+            m_prev, l_prev, acc = carry
+            k_j = jax.lax.dynamic_slice_in_dim(kx, ik * kc, kc, axis=3).astype(jnp.float32)
+            v_j = jax.lax.dynamic_slice_in_dim(vx, ik * kc, kc, axis=3).astype(jnp.float32)
+            s_ij = jnp.einsum("bhgqd,bhgkd->bhgqk", q_i, k_j) * scale
+            kpos = ik * kc + jnp.arange(kc)
+            mask = _block_mask(qpos, kpos, skv, causal, window)
+            s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m_prev, s_ij.max(-1))
+            alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+            p = jnp.where(mask[None, None, None], jnp.exp(s_ij - m_new[..., None]), 0.0)
+            l_new = alpha * l_prev + p.sum(-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum("bhgqk,bhgkd->bhgqd", p, v_j)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, group, qc), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, group, qc), jnp.float32),
+            jnp.zeros((b, hkv, group, qc, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        o_i = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse_i = m + jnp.log(jnp.maximum(l, 1e-30))
+        return o_i, lse_i
+
+    o, lse = jax.lax.map(q_block, jnp.arange(nq))
+    o = jnp.moveaxis(o, 0, 3).reshape(b, hkv, group, sq_pad, dh)
+    o = o.reshape(b, hq, sq_pad, dh)[:, :, :sq]
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, hkv, group, sq_pad)
+    lse = lse.reshape(b, hq, sq_pad)[:, :, :sq]
+    return o, lse
+
+
+def _flash_bwd_stream(res, g, causal, window, scale, qc, kc):
+    """Re-streaming backward: dq via inner accumulation, dk/dv via outer carry."""
+    q, k, v, o, lse = res
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qp, kp, vp, sq_pad, skv_pad = _pad_qkv(q, k, v, qc, kc)
+    gp = jnp.pad(g, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0))) if sq_pad != sq else g
+    op = jnp.pad(o, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0))) if sq_pad != sq else o
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, sq_pad - sq)),
+                   constant_values=NEG_INF) if sq_pad != sq else lse
+
+    qx = qp.reshape(b, hkv, group, sq_pad, dh).astype(jnp.float32)
+    gx = gp.reshape(b, hkv, group, sq_pad, dh).astype(jnp.float32)
+    ox = op.reshape(b, hkv, group, sq_pad, dh).astype(jnp.float32)
+    lx = lsep.reshape(b, hkv, group, sq_pad)
+    kx = kp.astype(jnp.float32)
+    vx = vp.astype(jnp.float32)
+    nq, nk = sq_pad // qc, skv_pad // kc
+    delta = (gx * ox).sum(-1)                                   # [b,hkv,g,sq]
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry
+        q_i = jax.lax.dynamic_slice_in_dim(qx, iq * qc, qc, axis=3)
+        g_i = jax.lax.dynamic_slice_in_dim(gx, iq * qc, qc, axis=3)
+        l_i = jax.lax.dynamic_slice_in_dim(lx, iq * qc, qc, axis=3)
+        d_i = jax.lax.dynamic_slice_in_dim(delta, iq * qc, qc, axis=3)
+        qpos = iq * qc + jnp.arange(qc) + (skv - sq)
+
+        def kv_step(dq_i, ik):
+            k_j = jax.lax.dynamic_slice_in_dim(kx, ik * kc, kc, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(vx, ik * kc, kc, axis=2)
+            s_ij = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j) * scale
+            kpos = ik * kc + jnp.arange(kc)
+            mask = _block_mask(qpos, kpos, skv, causal, window)
+            # padded q rows carry lse = -inf: zero them before exp overflows
+            mask = mask[None, None, None] & (l_i[..., None] > NEG_INF / 2)
+            p = jnp.where(mask, jnp.exp(jnp.minimum(s_ij - l_i[..., None], 30.0)), 0.0)
+            dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, g_i)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", g_i, v_j)
+            ds = p * (dp - d_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j)
+            dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_i)
+            return dq_i, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((b, hkv, group, qc, dh), jnp.float32)
+        dq_i, (dk_blks, dv_blks) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+        dk_full = jnp.moveaxis(dk_blks, 0, 2).reshape(b, hkv, skv_pad, dh)
+        dv_full = jnp.moveaxis(dv_blks, 0, 2).reshape(b, hkv, skv_pad, dh)
+        return (dk_acc + dk_full, dv_acc + dv_full), dq_i
+
+    zeros_kv = jnp.zeros((b, hkv, skv_pad, dh), jnp.float32)
+    (dk, dv), dq_blocks = jax.lax.scan(q_step, (zeros_kv, zeros_kv), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(b, hkv, group, sq_pad, dh)
+    dq = dq.reshape(b, hq, sq_pad, dh)[:, :, :sq]
+    return (dq.astype(q.dtype), dk[:, :, :skv].astype(k.dtype),
+            dv[:, :, :skv].astype(v.dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_xla_diff(causal: bool, window: Optional[int], scale: float,
+                    qc: int, kc: int):
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _flash_xla(q, k, v, causal=causal, window=window, scale=scale,
+                          q_chunk=qc, kv_chunk=kc)
+
+    def fwd(q, k, v):
+        o, lse = _flash_fwd_lse(q, k, v, causal, window, scale, qc, kc)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, g):
+        return _flash_bwd_stream(res, g.astype(jnp.float32), causal, window,
+                                 scale, qc, kc)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_xla_attention(q, k, v, *, causal=True, window=None, scale=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """O(S·chunk)-memory attention with the hand-written streaming backward."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qc = min(q_chunk, q.shape[2])
+    kc = min(kv_chunk, k.shape[2])
+    return _flash_xla_diff(causal, window, scale, qc, kc)(q, k, v)
+
+
+def _naive_attention(q, k, v, *, causal, window, scale):
+    """Direct S² einsum attention — every FLOP visible to cost analysis.
+
+    Used only by the dry-run probe configs (attn_naive=True): probes are
+    lowered, never executed, so the S² score materialization is harmless and
+    makes `cost_analysis()` loop-free (see roofline.py CAVEAT).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qx = q.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qx, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def self_attention_full(
+    params, x, positions, cfg,
+    *, causal: bool = True, window=None, return_kv: bool = False,
+):
+    """Train / prefill path.  Returns (out [B,S,D], optional (k, v))."""
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    scale = cfg.hd ** -0.5
+    if cfg.attn_naive:
+        o = _naive_attention(q, k, v, causal=causal, window=window, scale=scale)
+    elif cfg.flash_bwd:
+        o = flash_xla_attention(q, k, v, causal=causal, window=window, scale=scale)
+    elif active_mesh() is None and q.shape[2] >= 8:
+        o = flash_attention_diff(q, k, v, causal=causal, window=window, scale=scale,
+                                 bq=min(128, q.shape[2]), bkv=min(128, k.shape[2]))
+    else:
+        o = _flash_xla(q, k, v, causal=causal, window=window, scale=scale)
+    b, s = x.shape[0], x.shape[1]
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    out = o @ params["wo"].astype(jnp.dtype(cfg.compute_dtype))
+    out = constrain(out, BATCH_AXES, None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _masked_decode_attention(q, k_cache, v_cache, lengths, cfg, *, window=None):
+    """q [B,Hq,T,Dh] vs cache [B,Hkv,S,Dh]; key j valid iff j < lengths[b]+t+1.
+
+    §Perf note: scores accumulate in f32 via `preferred_element_type` — the
+    bf16 caches are never materialized as f32 copies (that upcast was ~0.5
+    GB/layer/device of the decode_32k memory term).
+    """
+    b, hq, t, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    qx = q.reshape(b, hkv, group, t, dh)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qx, k_cache,
+                        preferred_element_type=jnp.float32) * (dh ** -0.5)
+    kpos = jnp.arange(s)[None, None, :]
+    qabs = lengths[:, None, None] + jnp.arange(t)[None, :, None]   # absolute pos of queries
+    mask = kpos <= qabs
+    if window is not None:
+        mask = mask & (kpos > qabs - window)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(q.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, t, dh).astype(q.dtype)
+
+
+def self_attention_decode(
+    params, x, cfg, cache_k, cache_v, lengths, *, window=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Decode T new tokens; cache updated in place at per-sequence lengths.
+
+    For rolling-window caches (long_500k hybrid attention) the write position
+    wraps modulo the cache size — positions for RoPE stay absolute.
+    """
+    b, t, _ = x.shape
+    s_cache = cache_k.shape[2]
+    positions = lengths[:, None] + jnp.arange(t)[None, :]
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg)
+
+    # Write the new kv at each sequence's offset (wrap if windowed).
+    # §Perf: expressed as a one-hot masked update, NOT a scatter — scatter on
+    # the seq-sharded cache forces GSPMD reshards (~2.6 GB/layer/device in
+    # the decode_32k baseline); the masked form partitions elementwise.
+    write_pos = positions % s_cache if window is not None else positions
+
+    def write(cache, new):
+        # cache [B,Hkv,S,Dh], new [B,Hkv,T,Dh], write_pos [B,T]
+        onehot = (jnp.arange(s_cache)[None, None, :] ==
+                  write_pos[:, :, None])                       # [B,T,S]
+        keep = 1.0 - onehot.any(axis=1).astype(cache.dtype)    # [B,S]
+        upd = jnp.einsum("bts,bhtd->bhsd", onehot.astype(cache.dtype), new)
+        return cache * keep[:, None, :, None] + upd
+
+    cache_k = write(cache_k, k_new)
+    cache_v = write(cache_v, v_new)
+    spec = tuple(kv_cache_spec(cfg))
+    cache_k = constrain(cache_k, *spec)
+    cache_v = constrain(cache_v, *spec)
+
+    if window is not None:
+        # Rolling cache: every live slot is attendable; absolute masking is
+        # handled by the wrap (slots hold the last `s_cache` positions).
+        eff_len = jnp.minimum(lengths, s_cache)
+        o = _masked_decode_attention(q, cache_k, cache_v, eff_len, cfg, window=None)
+    else:
+        o = _masked_decode_attention(q, cache_k, cache_v, lengths, cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.hd)
+    out = o @ params["wo"].astype(jnp.dtype(cfg.compute_dtype))
+    return constrain(out, BATCH_AXES, None, None), cache_k, cache_v
+
+
+def cross_attention(params, x, memory_k, memory_v, cfg):
+    """Decoder cross-attention against encoder memory [B, Hkv, Se, Dh]."""
+    b, t, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = (x @ params["wq"].astype(cdt)).reshape(b, t, hq, hd).transpose(0, 2, 1, 3)
+    q = constrain(q, BATCH_AXES, _maybe_head_axis(hq), None, None)
+    se = memory_k.shape[2]
+    lengths = jnp.full((b,), se, jnp.int32)  # full memory attendable
+    group = hq // hkv
+    qx = q.reshape(b, hkv, group, t, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qx, memory_k.astype(jnp.float32)) * (hd ** -0.5)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, memory_v.astype(jnp.float32))
+    o = o.reshape(b, hq, t, hd).astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+    return constrain(o @ params["wo"].astype(cdt), BATCH_AXES, None, None)
+
+
+def project_cross_kv(params, memory, cfg):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    b, se, _ = memory.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    cdt = jnp.dtype(cfg.compute_dtype)
+    k = (memory @ params["wk"].astype(cdt)).reshape(b, se, hkv, hd).transpose(0, 2, 1, 3)
+    v = (memory @ params["wv"].astype(cdt)).reshape(b, se, hkv, hd).transpose(0, 2, 1, 3)
+    ax = _maybe_head_axis(hkv)
+    return constrain(k, BATCH_AXES, ax, None, None), constrain(v, BATCH_AXES, ax, None, None)

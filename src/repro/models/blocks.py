@@ -1,0 +1,218 @@
+"""Layer-stack composition: period-pattern scan over heterogeneous blocks.
+
+Architectures mix block kinds (jamba: 7 mamba + 1 attention per period; MoE
+every other layer).  To keep the lowered HLO small (one while-loop, not 94
+inlined layers — critical for 80 dry-run compiles on one CPU), layers are
+grouped into *periods*: the layer pattern repeats every
+``lcm(attn_every, moe_every)`` layers, parameters are stacked per pattern
+position over periods, and the stack runs as one ``lax.scan`` whose body
+executes one period (pattern positions unrolled).
+
+Caches thread through the same scan: per pattern position, a stacked
+[n_periods, ...] cache leaf is consumed (xs) and re-emitted (ys).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attn_defs, self_attention_decode, self_attention_full,
+)
+from .layers import ParamDef, norm_def, rms_norm
+from .mlp import mlp, mlp_defs
+from .moe import moe, moe_defs
+from .rwkv import rwkv_channel_mix, rwkv_defs, rwkv_time_mix
+from .ssm import mamba, mamba_defs
+
+Pytree = Any
+
+
+def layer_pattern(cfg) -> Tuple[List[Tuple[str, bool]], int]:
+    """[(kind, is_moe)] over one period + the period count."""
+    kinds = cfg.block_kinds()
+    period = 1
+    if cfg.attn_every:
+        period = math.lcm(period, cfg.attn_every)
+    if cfg.n_experts:
+        period = math.lcm(period, cfg.moe_every)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    pattern = [(kinds[i], cfg.layer_is_moe(i) and kinds[i] != "rwkv") for i in range(period)]
+    return pattern, cfg.n_layers // period
+
+
+def block_defs(cfg, kind: str, is_moe: bool) -> Dict[str, Any]:
+    """ParamDefs of one block (pre-norms + mixer + feed-forward)."""
+    defs: Dict[str, Any] = {"norm1": norm_def(cfg)}
+    if kind == "attn":
+        defs["attn"] = attn_defs(cfg)
+    elif kind == "mamba":
+        defs["mamba"] = mamba_defs(cfg)
+    elif kind == "rwkv":
+        defs["time_mix"] = rwkv_defs(cfg)
+        # rwkv block = time-mix + channel-mix, no separate mlp
+        defs["norm2"] = norm_def(cfg)
+        return defs
+    defs["norm2"] = norm_def(cfg)
+    defs["ffn"] = moe_defs(cfg) if is_moe else mlp_defs(cfg)
+    return defs
+
+
+def stack_defs(cfg) -> Dict[str, Any]:
+    """All block params: {"pos{j}": defs stacked over periods}."""
+    pattern, n_periods = layer_pattern(cfg)
+    out = {}
+    for j, (kind, is_moe) in enumerate(pattern):
+        defs = block_defs(cfg, kind, is_moe)
+        out[f"pos{j}"] = jax.tree.map(
+            lambda d: d.with_layer_dim(n_periods), defs,
+            is_leaf=lambda v: isinstance(v, ParamDef),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_full(params, x, positions, cfg, kind: str, is_moe: bool,
+                *, window=None, collect_cache: bool):
+    """One block, full-sequence path.  Returns (x, cache_leaf_or_None)."""
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    cache = None
+    if kind == "attn":
+        if collect_cache:
+            o, (k, v) = self_attention_full(
+                params["attn"], h, positions, cfg, window=window, return_kv=True
+            )
+            cache = {"k": k, "v": v}
+        else:
+            o = self_attention_full(params["attn"], h, positions, cfg, window=window)
+        x = x + o
+    elif kind == "mamba":
+        if collect_cache:
+            o, (conv_s, ssm_s) = mamba(params["mamba"], h, cfg, return_state=True)
+            cache = {"conv": conv_s, "ssm": ssm_s}
+        else:
+            x_o = mamba(params["mamba"], h, cfg)
+            o = x_o
+        x = x + o
+    elif kind == "rwkv":
+        if collect_cache:
+            o, (tm_last, wkv) = rwkv_time_mix(params["time_mix"], h, cfg, return_state=True)
+            x = x + o
+            h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+            o2, cm_last = rwkv_channel_mix(params["time_mix"], h2, cfg, return_state=True)
+            x = x + o2
+            return x, {"tm_shift": tm_last, "wkv": wkv, "cm_shift": cm_last}
+        o = rwkv_time_mix(params["time_mix"], h, cfg)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + rwkv_channel_mix(params["time_mix"], h2, cfg)
+        return x, None
+    h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+    ffn = moe if is_moe else mlp
+    x = x + ffn(params["ffn"], h2, cfg)
+    return x, cache
+
+
+def run_stack_full(stack_params, x, positions, cfg, *, window=None,
+                   collect_cache: bool = False):
+    """Scan all periods.  Returns (x, caches or None).
+
+    caches: {"pos{j}": stacked-[n_periods, ...] cache pytree}.
+    """
+    pattern, n_periods = layer_pattern(cfg)
+
+    per_block = cfg.remat and cfg.remat_policy == "per_block"
+
+    def one_block(j, kind, is_moe, params_j, h):
+        return _block_full(params_j, h, positions, cfg, kind, is_moe,
+                           window=window, collect_cache=collect_cache)
+
+    def period_body(h, xs):
+        caches = {}
+        for j, (kind, is_moe) in enumerate(pattern):
+            fn = functools.partial(one_block, j, kind, is_moe)
+            if per_block:
+                # §Perf: recompute at block granularity — the period-level
+                # checkpoint re-materializes a whole 8-block jamba period at
+                # once (≈500 GB/device temp); per-block bounds the recompute
+                # working set to one block.
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            h, c = fn(xs[f"pos{j}"], h)
+            if collect_cache:
+                caches[f"pos{j}"] = c
+        return h, (caches if collect_cache else None)
+
+    body = period_body
+    if cfg.remat and not per_block:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(period_body, policy=policy)
+    x, caches = jax.lax.scan(body, x, stack_params, unroll=cfg.scan_unroll)
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# decode (incremental, stateful)
+# ---------------------------------------------------------------------------
+
+
+def _block_decode(params, x, cfg, kind: str, is_moe: bool, cache, lengths,
+                  *, window=None):
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        o, ck, cv = self_attention_decode(
+            params["attn"], h, cfg, cache["k"], cache["v"], lengths, window=window
+        )
+        cache = {"k": ck, "v": cv}
+        x = x + o
+    elif kind == "mamba":
+        o, (conv_s, ssm_s) = mamba(
+            params["mamba"], h, cfg,
+            conv_state=cache["conv"], ssm_state=cache["ssm"], return_state=True,
+        )
+        cache = {"conv": conv_s, "ssm": ssm_s}
+        x = x + o
+    elif kind == "rwkv":
+        o, (tm_last, wkv) = rwkv_time_mix(
+            params["time_mix"], h, cfg,
+            shift_state=cache["tm_shift"], wkv_state=cache["wkv"], return_state=True,
+        )
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        o2, cm_last = rwkv_channel_mix(
+            params["time_mix"], h2, cfg, shift_state=cache["cm_shift"], return_state=True
+        )
+        x = x + o2
+        return x, {"tm_shift": tm_last, "wkv": wkv, "cm_shift": cm_last}
+    h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+    ffn = moe if is_moe else mlp
+    x = x + ffn(params["ffn"], h2, cfg)
+    return x, cache
+
+
+def run_stack_decode(stack_params, x, cfg, caches, lengths, *, window=None):
+    """One decode step through all periods; caches updated functionally."""
+    pattern, _ = layer_pattern(cfg)
+
+    def period_body(h, xs):
+        params, cache = xs
+        new_caches = {}
+        for j, (kind, is_moe) in enumerate(pattern):
+            h, c = _block_decode(params[f"pos{j}"], h, cfg, kind, is_moe,
+                                 cache[f"pos{j}"], lengths, window=window)
+            new_caches[f"pos{j}"] = c
+        return h, new_caches
+
+    x, new_caches = jax.lax.scan(period_body, x, (stack_params, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches

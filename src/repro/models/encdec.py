@@ -1,0 +1,206 @@
+"""Encoder–decoder model (seamless-m4t family, audio frontend stub).
+
+Encoder: bidirectional attention over projected frame embeddings.
+Decoder: causal self-attention + cross-attention against encoder memory.
+
+Serving decomposes as the brief's shapes require:
+  * ``prefill_32k``  — encode 32k frames + precompute per-layer cross-K/V.
+  * ``decode_32k``   — one decoder token against the 32k encoder memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import BATCH_AXES, TP_AXIS, constrain
+from .attention import (
+    attn_defs, cross_attention, kv_cache_spec, project_cross_kv,
+    self_attention_decode, self_attention_full,
+)
+from .config import ArchConfig
+from .frontends import frontend_defs, project_frontend
+from .layers import (
+    ParamDef, cross_entropy_loss, embed_defs, init_from_defs, norm_def,
+    rms_norm, shapes_from_defs, specs_from_defs,
+)
+from .mlp import mlp, mlp_defs
+
+Pytree = Any
+
+
+def _enc_block_defs(cfg):
+    return {"norm1": norm_def(cfg), "attn": attn_defs(cfg),
+            "norm2": norm_def(cfg), "ffn": mlp_defs(cfg)}
+
+
+def _dec_block_defs(cfg):
+    return {"norm1": norm_def(cfg), "self_attn": attn_defs(cfg),
+            "norm2": norm_def(cfg), "cross_attn": attn_defs(cfg),
+            "norm3": norm_def(cfg), "ffn": mlp_defs(cfg)}
+
+
+def _stack(defs: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda d: d.with_layer_dim(n), defs,
+                        is_leaf=lambda v: isinstance(v, ParamDef))
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ArchConfig
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": embed_defs(cfg),
+            "frontend": frontend_defs(cfg),
+            "encoder": _stack(_enc_block_defs(cfg), cfg.enc_layers),
+            "enc_norm": norm_def(cfg),
+            "decoder": _stack(_dec_block_defs(cfg), cfg.dec_layers),
+            "final_norm": norm_def(cfg),
+        }
+
+    def init(self, key):
+        return init_from_defs(self.param_defs(), key)
+
+    def param_specs(self):
+        return specs_from_defs(self.param_defs(), self.cfg.fsdp)
+
+    def param_shapes(self):
+        return shapes_from_defs(self.param_defs())
+
+    def param_shardings(self, mesh):
+        from .layers import shardings_from_defs
+        return shardings_from_defs(self.param_defs(), self.cfg.fsdp, mesh)
+
+    # ---- encoder ------------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        h = project_frontend(params["frontend"], frames, cfg)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+
+        def body(h, layer):
+            x = rms_norm(h, layer["norm1"], cfg.norm_eps)
+            h = h + self_attention_full(layer["attn"], x, positions, cfg, causal=False)
+            x = rms_norm(h, layer["norm2"], cfg.norm_eps)
+            h = h + mlp(layer["ffn"], x, cfg)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, params["encoder"], unroll=cfg.scan_unroll)
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    # ---- decoder ------------------------------------------------------------
+    def _decode_stack_full(self, params, tokens, memory):
+        cfg = self.cfg
+        b, s = tokens.shape
+        h = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(
+            jnp.dtype(cfg.compute_dtype))
+        h = constrain(h, BATCH_AXES, None, None)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+
+        def body(h, layer):
+            x = rms_norm(h, layer["norm1"], cfg.norm_eps)
+            h = h + self_attention_full(layer["self_attn"], x, positions, cfg)
+            x = rms_norm(h, layer["norm2"], cfg.norm_eps)
+            mk, mv = project_cross_kv(layer["cross_attn"], memory, cfg)
+            h = h + cross_attention(layer["cross_attn"], x, mk, mv, cfg)
+            x = rms_norm(h, layer["norm3"], cfg.norm_eps)
+            h = h + mlp(layer["ffn"], x, cfg)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, params["decoder"], unroll=cfg.scan_unroll)
+        return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        logits = h @ params["embed"]["lm_head"].astype(jnp.dtype(cfg.compute_dtype))
+        return constrain(logits, BATCH_AXES, None, TP_AXIS)
+
+    # ---- training -----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        memory = self.encode(params, batch["frames"])
+        h = self._decode_stack_full(params, batch["tokens"], memory)
+        logits = self._logits(params, h)
+        return cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+    # ---- serving -------------------------------------------------------------
+    def cache_defs(self, batch_size: int, cache_len: int, enc_len: int):
+        cfg = self.cfg
+        kv_spec = tuple(kv_cache_spec(cfg))
+        cdt = cfg.compute_dtype
+        kv = lambda s_: ParamDef((batch_size, cfg.n_kv_heads, s_, cfg.hd),
+                                 kv_spec, "zeros", cdt)
+        per_layer = {
+            "k": kv(cache_len), "v": kv(cache_len),
+            "cross_k": kv(enc_len), "cross_v": kv(enc_len),
+        }
+        return _stack(per_layer, cfg.dec_layers)
+
+    def cache_shapes(self, batch_size, cache_len, enc_len):
+        return shapes_from_defs(self.cache_defs(batch_size, cache_len, enc_len))
+
+    def cache_specs(self, batch_size, cache_len, enc_len):
+        return specs_from_defs(self.cache_defs(batch_size, cache_len, enc_len), fsdp=True)
+
+    def cache_shardings(self, batch_size, cache_len, enc_len, mesh):
+        from .layers import shardings_from_defs
+        return shardings_from_defs(
+            self.cache_defs(batch_size, cache_len, enc_len), True, mesh)
+
+    def init_cache(self, batch_size, cache_len, enc_len):
+        return init_from_defs(self.cache_defs(batch_size, cache_len, enc_len),
+                              jax.random.PRNGKey(0))
+
+    def prefill(self, params, batch, cache_len: int):
+        """Encode frames; precompute cross-K/V; empty self cache."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        b = memory.shape[0]
+
+        def collect(_, layer):
+            mk, mv = project_cross_kv(layer["cross_attn"], memory, cfg)
+            return None, (mk, mv)
+
+        _, (mks, mvs) = jax.lax.scan(collect, None, params["decoder"])
+        cache = {
+            "k": jnp.zeros((cfg.dec_layers, b, cfg.n_kv_heads, cache_len, cfg.hd),
+                           jnp.dtype(cfg.compute_dtype)),
+            "v": jnp.zeros((cfg.dec_layers, b, cfg.n_kv_heads, cache_len, cfg.hd),
+                           jnp.dtype(cfg.compute_dtype)),
+            "cross_k": mks.astype(jnp.dtype(cfg.compute_dtype)),
+            "cross_v": mvs.astype(jnp.dtype(cfg.compute_dtype)),
+        }
+        lengths = jnp.zeros((b,), jnp.int32)
+        return cache, lengths
+
+    def decode(self, params, cache, tokens, lengths):
+        cfg = self.cfg
+        b, t = tokens.shape
+        h = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(
+            jnp.dtype(cfg.compute_dtype))
+        h = constrain(h, BATCH_AXES, None, None)
+
+        def body(h, xs):
+            layer, c = xs
+            x = rms_norm(h, layer["norm1"], cfg.norm_eps)
+            o, ck, cv = self_attention_decode(layer["self_attn"], x, cfg,
+                                              c["k"], c["v"], lengths)
+            h = h + o
+            x = rms_norm(h, layer["norm2"], cfg.norm_eps)
+            h = h + cross_attention(layer["cross_attn"], x, c["cross_k"], c["cross_v"], cfg)
+            x = rms_norm(h, layer["norm3"], cfg.norm_eps)
+            h = h + mlp(layer["ffn"], x, cfg)
+            return h, {"k": ck, "v": cv, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+        h, new_cache = jax.lax.scan(body, h, (params["decoder"], cache),
+                                    unroll=cfg.scan_unroll)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, new_cache, lengths + t

@@ -1,0 +1,31 @@
+"""Modality frontends — STUBS per the brief.
+
+``[vlm]`` / ``[audio]`` architectures specify the transformer backbone only;
+``input_specs()`` provides *precomputed* patch/frame embeddings.  The stub is
+a single learned projection from the frontend feature width to d_model —
+enough to exercise the real data path (prefix fusion, masking, sharding)
+without reproducing SigLIP / w2v-BERT.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.distributed.api import BATCH_AXES, FSDP_AXIS, constrain
+from .layers import ParamDef
+
+
+def frontend_defs(cfg) -> Dict[str, ParamDef]:
+    return {
+        "proj": ParamDef((cfg.frontend_dim, cfg.d_model), (None, FSDP_AXIS),
+                         "fan_in", cfg.param_dtype),
+    }
+
+
+def project_frontend(params, feats: jnp.ndarray, cfg) -> jnp.ndarray:
+    """feats [B, P, frontend_dim] → [B, P, D] prefix embeddings."""
+    out = feats.astype(jnp.dtype(cfg.compute_dtype)) @ params["proj"].astype(
+        jnp.dtype(cfg.compute_dtype)
+    )
+    return constrain(out, BATCH_AXES, None, None)

@@ -1,0 +1,162 @@
+"""Shared building blocks: param definitions, norms, RoPE, embeddings, loss.
+
+Parameters are plain nested dicts of arrays.  Every module exposes a
+``*_defs(cfg)`` function returning a dict of :class:`ParamDef` — the single
+source of truth for shapes, initializers *and* partition specs, consumed by
+``init_from_defs`` (materialization) and ``specs_from_defs`` (dry-run
+ShapeDtypeStructs + pjit shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import FSDP_AXIS, TP_AXIS
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: Tuple[Any, ...]            # logical partition entries, len == ndim
+    init: str = "fan_in"             # fan_in | normal | zeros | ones
+    dtype: str = "bfloat16"
+    keep_fsdp: bool = False          # retain 'data' sharding even when fsdp=False
+    # (serving: dense weights replicate over data, experts stay 2-D sharded)
+
+    def with_layer_dim(self, n_layers: int) -> "ParamDef":
+        return dataclasses.replace(
+            self, shape=(n_layers, *self.shape), spec=(None, *self.spec)
+        )
+
+
+def _leaf_key(key: jax.Array, path: str) -> jax.Array:
+    return jax.random.fold_in(key, abs(hash(path)) % (2**31))
+
+
+def init_from_defs(defs: Dict[str, Any], key: jax.Array, prefix: str = "") -> Pytree:
+    out = {}
+    for name, d in defs.items():
+        path = f"{prefix}/{name}"
+        if isinstance(d, dict):
+            out[name] = init_from_defs(d, key, path)
+            continue
+        dtype = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            out[name] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            out[name] = jnp.ones(d.shape, dtype)
+        else:
+            k = _leaf_key(key, path)
+            if d.init == "fan_in" and len(d.shape) >= 2:
+                scale = (d.shape[-2]) ** -0.5
+            else:
+                scale = 0.02
+            out[name] = (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+    return out
+
+
+def specs_from_defs(defs: Dict[str, Any], fsdp: bool) -> Pytree:
+    """PartitionSpec tree.  fsdp=False strips the 'data' axis from specs."""
+    out = {}
+    for name, d in defs.items():
+        if isinstance(d, dict):
+            out[name] = specs_from_defs(d, fsdp)
+            continue
+        entries = []
+        for e in d.spec:
+            if not fsdp and not d.keep_fsdp:
+                if e == FSDP_AXIS:
+                    e = None
+                elif isinstance(e, tuple):
+                    e = tuple(a for a in e if a != FSDP_AXIS) or None
+            entries.append(e)
+        out[name] = P(*entries)
+    return out
+
+
+def shapes_from_defs(defs: Dict[str, Any]) -> Pytree:
+    out = {}
+    for name, d in defs.items():
+        out[name] = (
+            shapes_from_defs(d) if isinstance(d, dict)
+            else jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+        )
+    return out
+
+
+def shardings_from_defs(defs: Dict[str, Any], fsdp: bool, mesh) -> Pytree:
+    """NamedShardings with divisibility filtering (see api.shard_by_shape)."""
+    from repro.distributed.api import shard_by_shape
+
+    specs = specs_from_defs(defs, fsdp)
+    shapes = shapes_from_defs(defs)
+    return jax.tree.map(
+        lambda sp, sd: shard_by_shape(sp, sd.shape, mesh), specs, shapes,
+        is_leaf=lambda v: isinstance(v, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, H, S, Dh]; positions: [B, S] absolute token positions."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                              # [Dh/2]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,       # [B, S, V] (V may be sharded over 'model')
+    labels: jnp.ndarray,       # [B, S]
+    mask: Optional[jnp.ndarray] = None,
+    *,
+    z_loss: float = 0.0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((logits.argmax(-1) == labels) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+def embed_defs(cfg) -> Dict[str, ParamDef]:
+    d = {"embedding": ParamDef((cfg.vocab, cfg.d_model), (TP_AXIS, FSDP_AXIS), "normal", cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((cfg.d_model, cfg.vocab), (FSDP_AXIS, TP_AXIS), "fan_in", cfg.param_dtype)
+    return d
+
+
+def norm_def(cfg) -> ParamDef:
+    return ParamDef((cfg.d_model,), (None,), "ones", cfg.param_dtype)

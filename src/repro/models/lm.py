@@ -1,0 +1,198 @@
+"""CausalLM: the decoder-only model family (dense / MoE / hybrid / SSM / VLM).
+
+Pure-functional API over nested-dict params, built from ParamDefs so the same
+source of truth yields materialized params (smoke tests), ShapeDtypeStructs
+(dry-run) and PartitionSpecs (pjit shardings).
+
+Entry points:
+  * ``forward``  — logits for a full sequence (train / eval).
+  * ``loss``     — next-token cross entropy (+ metrics).
+  * ``prefill``  — full forward that also returns the serving cache.
+  * ``decode``   — one incremental step against the cache (serve_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import BATCH_AXES, TP_AXIS, constrain
+from .attention import kv_cache_spec
+from .blocks import layer_pattern, run_stack_decode, run_stack_full, stack_defs
+from .config import ArchConfig
+from .frontends import frontend_defs, project_frontend
+from .layers import (
+    ParamDef, cross_entropy_loss, embed_defs, init_from_defs, norm_def,
+    rms_norm, shapes_from_defs, specs_from_defs,
+)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalLM:
+    cfg: ArchConfig
+
+    # ---- parameters -------------------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {
+            "embed": embed_defs(cfg),
+            "blocks": stack_defs(cfg),
+            "final_norm": norm_def(cfg),
+        }
+        if cfg.frontend:
+            defs["frontend"] = frontend_defs(cfg)
+        return defs
+
+    def init(self, key: jax.Array) -> Pytree:
+        return init_from_defs(self.param_defs(), key)
+
+    def param_specs(self) -> Pytree:
+        return specs_from_defs(self.param_defs(), self.cfg.fsdp)
+
+    def param_shapes(self) -> Pytree:
+        return shapes_from_defs(self.param_defs())
+
+    def param_shardings(self, mesh) -> Pytree:
+        from .layers import shardings_from_defs
+        return shardings_from_defs(self.param_defs(), self.cfg.fsdp, mesh)
+
+    # ---- embedding / head --------------------------------------------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        h = jnp.take(params["embed"]["embedding"], tokens, axis=0)
+        h = h.astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.embed_scale:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+        return constrain(h, BATCH_AXES, None, None)
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.tie_embeddings:
+            logits = h @ params["embed"]["embedding"].astype(cdt).T
+        else:
+            logits = h @ params["embed"]["lm_head"].astype(cdt)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        return constrain(logits, BATCH_AXES, None, TP_AXIS)
+
+    def _fuse_frontend(self, params, h, batch):
+        if self.cfg.frontend and "frontend_feats" in batch:
+            pre = project_frontend(params["frontend"], batch["frontend_feats"], self.cfg)
+            h = jax.lax.dynamic_update_slice(h, pre.astype(h.dtype), (0, 0, 0))
+        return h
+
+    # ---- full-sequence paths ----------------------------------------------
+    def forward(self, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])[None].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, tokens.shape)
+        h = self._fuse_frontend(params, self._embed(params, tokens), batch)
+        h, _ = run_stack_full(params["blocks"], h, positions, self.cfg,
+                              window=self.cfg.window)
+        h = rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        return self._logits(params, h)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        return cross_entropy_loss(logits, labels, mask)
+
+    # ---- serving -----------------------------------------------------------
+    def cache_defs(self, batch_size: int, cache_len: int) -> Dict[str, Any]:
+        """ParamDef-style description of the decode cache (shapes + specs)."""
+        cfg = self.cfg
+        pattern, n_periods = layer_pattern(cfg)
+        kv_spec = tuple(kv_cache_spec(cfg))
+        cdt = cfg.compute_dtype
+        out: Dict[str, Any] = {}
+        for j, (kind, _) in enumerate(pattern):
+            if kind == "attn":
+                c = {
+                    "k": ParamDef((batch_size, cfg.n_kv_heads, cache_len, cfg.hd),
+                                  kv_spec, "zeros", cdt),
+                    "v": ParamDef((batch_size, cfg.n_kv_heads, cache_len, cfg.hd),
+                                  kv_spec, "zeros", cdt),
+                }
+            elif kind == "mamba":
+                c = {
+                    "conv": ParamDef((batch_size, cfg.ssm_d_conv - 1, cfg.ssm_d_inner),
+                                     (BATCH_AXES, None, TP_AXIS), "zeros", cdt),
+                    "ssm": ParamDef((batch_size, cfg.ssm_d_inner, cfg.ssm_d_state),
+                                    (BATCH_AXES, TP_AXIS, None), "zeros", "float32"),
+                }
+            else:  # rwkv
+                c = {
+                    "tm_shift": ParamDef((batch_size, cfg.d_model), (BATCH_AXES, None),
+                                         "zeros", cdt),
+                    "wkv": ParamDef((batch_size, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                                     cfg.rwkv_head_dim),
+                                    (BATCH_AXES, TP_AXIS, None, None), "zeros", "float32"),
+                    "cm_shift": ParamDef((batch_size, cfg.d_model), (BATCH_AXES, None),
+                                         "zeros", cdt),
+                }
+            out[f"pos{j}"] = jax.tree.map(
+                lambda d: d.with_layer_dim(n_periods), c,
+                is_leaf=lambda v: isinstance(v, ParamDef),
+            )
+        return out
+
+    def init_cache(self, batch_size: int, cache_len: int) -> Pytree:
+        defs = self.cache_defs(batch_size, cache_len)
+        return init_from_defs(defs, jax.random.PRNGKey(0))
+
+    def cache_specs(self, batch_size: int, cache_len: int) -> Pytree:
+        return specs_from_defs(self.cache_defs(batch_size, cache_len), fsdp=True)
+
+    def cache_shardings(self, batch_size: int, cache_len: int, mesh) -> Pytree:
+        from .layers import shardings_from_defs
+        return shardings_from_defs(self.cache_defs(batch_size, cache_len), True, mesh)
+
+    def cache_shapes(self, batch_size: int, cache_len: int) -> Pytree:
+        return shapes_from_defs(self.cache_defs(batch_size, cache_len))
+
+    def prefill(self, params, batch, cache_len: int):
+        """Full forward + cache build.  Returns (last-token logits, cache, lengths)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+        h = self._fuse_frontend(params, self._embed(params, tokens), batch)
+        h, caches = run_stack_full(params["blocks"], h, positions, cfg,
+                                   window=cfg.window, collect_cache=True)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, h[:, -1:])
+
+        # pad attention kv to cache capacity
+        pattern, n_periods = layer_pattern(cfg)
+        out_cache = {}
+        for j, (kind, _) in enumerate(pattern):
+            c = caches[f"pos{j}"]
+            if kind == "attn":
+                def pad_kv(kv):
+                    pad = cache_len - kv.shape[3]
+                    if pad > 0:
+                        kv = jnp.pad(kv, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                    kv = kv[:, :, :, :cache_len]
+                    return constrain(kv, None, *kv_cache_spec(cfg))
+                c = {"k": pad_kv(c["k"]), "v": pad_kv(c["v"])}
+            out_cache[f"pos{j}"] = c
+        lengths = jnp.full((b,), s, jnp.int32)
+        return logits, out_cache, lengths
+
+    def decode(self, params, cache, tokens, lengths):
+        """tokens [B, T_new] (typically T_new = 1).  Returns (logits, cache, lengths)."""
+        cfg = self.cfg
+        h = self._embed(params, tokens)
+        h, cache = run_stack_decode(params["blocks"], h, cfg, cache, lengths,
+                                    window=cfg.window)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, cache, lengths + tokens.shape[1]

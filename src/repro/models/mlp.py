@@ -1,0 +1,37 @@
+"""Gated MLP (SwiGLU / GeGLU), TP-sharded on the hidden axis."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import BATCH_AXES, FSDP_AXIS, TP_AXIS, constrain
+from .layers import ParamDef
+
+
+def mlp_defs(cfg, d_ff: int = 0) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    return {
+        "wg": ParamDef((d, f), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wu": ParamDef((d, f), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wd": ParamDef((f, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt),
+    }
+
+
+def _act(x, kind: str):
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)  # swiglu
+
+
+def mlp(params, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    g = x @ params["wg"].astype(cdt)
+    u = x @ params["wu"].astype(cdt)
+    h = _act(g, cfg.activation) * u
+    h = constrain(h, BATCH_AXES, None, TP_AXIS)
+    out = h @ params["wd"].astype(cdt)
+    return constrain(out, BATCH_AXES, None, None)

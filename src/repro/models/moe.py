@@ -1,0 +1,273 @@
+"""Mixture-of-Experts layer with expert parallelism over the 'model' axis.
+
+Design (DESIGN.md §3.3, EP): the GShard-style ``[T, E, C]`` dispatch einsum is
+O(T²·k/E) memory and is unusable at 10⁶-token batches (a 17 GB/shard dispatch
+tensor for qwen3 train_4k).  Instead we use *sort-based capacity dispatch*
+inside ``shard_map``:
+
+  1. tokens are sharded over ('pod','data') and replicated over 'model';
+  2. each model shard owns ``E_loc = E / tp`` experts;
+  3. router logits → top-k (identical on every model shard — same inputs,
+     same weights, deterministic argsort);
+  4. per shard: flatten (token, expert) pairs, stable-sort by expert id,
+     rank-in-segment, drop beyond per-expert capacity, gather into an
+     ``[E_loc·C, D]`` buffer (static shape), two batched matmuls, weighted
+     scatter-add back to token order;
+  5. one ``psum`` over 'model' combines expert outputs (each token's k
+     experts live on arbitrary shards) — the same collective pattern as the
+     TP MLP, so EP costs no extra all_to_all on this mesh.
+
+Dropped-token accounting: capacity C = ceil(T_loc·k/E · capacity_factor);
+overflow tokens lose that expert's contribution (standard capacity dropping;
+the router's gate renormalization keeps the output well-scaled).
+
+Without an active mesh (CPU smoke tests) the same inner function runs with
+E_loc = E and no psum — bitwise the tp=1 case.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import (
+    BATCH_AXES, FSDP_AXIS, TP_AXIS, active_mesh, axis_size,
+)
+from .layers import ParamDef
+from .mlp import _act
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = cfg.param_dtype
+    defs = {
+        "router": ParamDef((d, e), (FSDP_AXIS, None), "fan_in", dt),
+        "wg": ParamDef((e, d, fe), (TP_AXIS, FSDP_AXIS, None), "fan_in", dt,
+                       keep_fsdp=True),
+        "wu": ParamDef((e, d, fe), (TP_AXIS, FSDP_AXIS, None), "fan_in", dt,
+                       keep_fsdp=True),
+        "wd": ParamDef((e, fe, d), (TP_AXIS, None, FSDP_AXIS), "fan_in", dt,
+                       keep_fsdp=True),
+    }
+    if cfg.n_shared_experts:
+        fe_sh = cfg.moe_d_ff * cfg.n_shared_experts
+        defs["shared_wg"] = ParamDef((d, fe_sh), (FSDP_AXIS, TP_AXIS), "fan_in", dt)
+        defs["shared_wu"] = ParamDef((d, fe_sh), (FSDP_AXIS, TP_AXIS), "fan_in", dt)
+        defs["shared_wd"] = ParamDef((fe_sh, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt)
+    return defs
+
+
+def _moe_local(x2d, router, wg, wu, wd, cfg, e_start: int, tp: int):
+    """Tokens [T, D] × local experts wg/wu/wd [E_loc, ...] → [T, D] partial."""
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = wg.shape[0]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if t <= 32:
+        # decode regime: capacity = t ⇒ provably drop-free (a single expert
+        # can at most be picked by every token once)
+        cap = t
+    else:
+        cap = max(1, int(t * k / e * cfg.capacity_factor))
+
+    logits = (x2d @ router.astype(cdt)).astype(jnp.float32)         # [T, E]
+    gates, eids = jax.lax.top_k(logits, k)                          # [T, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = eids.reshape(-1)                                       # [T·k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gates.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    seg_start = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(t * k) - seg_start                            # pos within expert
+    local = (se >= e_start) & (se < e_start + e_loc)
+    keep = (rank < cap) & local
+    slot = jnp.where(keep, (se - e_start) * cap + rank, e_loc * cap)  # OOB → dropped
+
+    buf = jnp.zeros((e_loc * cap, d), cdt).at[slot].set(
+        x2d[st] * keep[:, None].astype(cdt), mode="drop"
+    )
+    buf = buf.reshape(e_loc, cap, d)
+    h = _act(jnp.einsum("ecd,edf->ecf", buf, wg.astype(cdt)), cfg.activation)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu.astype(cdt))
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(cdt)).reshape(e_loc * cap, d)
+
+    out = jnp.zeros((t, d), cdt).at[st].add(
+        y[jnp.minimum(slot, e_loc * cap - 1)]
+        * (sg * keep.astype(jnp.float32))[:, None].astype(cdt),
+        mode="drop",
+    )
+    return out
+
+
+def _moe_weight_stationary(params, x, cfg, mesh, tp: int):
+    """§Perf (serve): experts keep their 2-D (model × data) storage sharding.
+
+    The baseline island's ``in_specs=P('model', None, None)`` forces an
+    all-gather of every expert's weights over 'data' each layer — 245 GB/step
+    per device for kimi-k2 decode_32k (the measured baseline bottleneck).
+    Here the island's in_specs MATCH the storage layout (wg [E, D, Fe] over
+    (model, data)), and instead the *tokens* are all-gathered over the data
+    axes — a few MB at decode batch sizes.  Exact for t ≤ 512 (capacity = t).
+
+    Per layer wire: gather x (t·D·2B) + psum h (2·E_loc·cap·Fe·4B) + psum y +
+    gather out — ~10 MB vs 4 GB of expert weights.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = e // tp
+    fe = cfg.moe_d_ff
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.distributed.api import _divisible
+    entry = _divisible(tuple(a for a in BATCH_AXES if a in mesh.axis_names), b, mesh)
+    daxes = (() if entry is None
+             else ((entry,) if isinstance(entry, str) else tuple(entry)))
+    nd_fsdp = mesh.shape.get("data", 1)
+    d_slice = d // nd_fsdp
+
+    def island(x_loc, router, wg_loc, wu_loc, wd_loc):
+        bl, sl, _ = x_loc.shape
+        x_g = (jax.lax.all_gather(x_loc, daxes, axis=0, tiled=True)
+               if daxes else x_loc)                                  # [b_g, s, d]
+        t_g = x_g.shape[0] * sl
+        x2 = x_g.reshape(t_g, d)
+        # §Perf iteration A4: capacity-based buffers above the drop-free
+        # regime — shrinks the h/u psum wire bytes ~cap-fold (overflow tokens
+        # lose that expert, standard serving capacity dropping).
+        cap = t_g if t_g <= 32 else max(k, int(t_g * k / e * cfg.capacity_factor))
+
+        logits = (x2 @ router.astype(cdt)).astype(jnp.float32)
+        gates, eids = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(gates, axis=-1)
+        flat_e = eids.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t_g), k)
+        flat_g = gates.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        rank = jnp.arange(t_g * k) - jnp.searchsorted(se, se, side="left")
+        e0 = jax.lax.axis_index(TP_AXIS) * e_loc
+        keep = (rank < cap) & (se >= e0) & (se < e0 + e_loc)
+        slot = jnp.where(keep, (se - e0) * cap + rank, e_loc * cap)
+
+        # dispatch only the LOCAL D-slice of each token (weights stay put)
+        d0 = jax.lax.axis_index("data") * d_slice if nd_fsdp > 1 else 0
+        x_sl = jax.lax.dynamic_slice_in_dim(x2, d0, d_slice, axis=1)
+        buf = jnp.zeros((e_loc * cap + 1, d_slice), cdt).at[slot].set(
+            x_sl[st] * keep[:, None].astype(cdt), mode="drop"
+        )[:-1].reshape(e_loc, cap, d_slice)
+
+        g_part = jnp.einsum("ecd,edf->ecf", buf, wg_loc.astype(cdt))
+        u_part = jnp.einsum("ecd,edf->ecf", buf, wu_loc.astype(cdt))
+        if nd_fsdp > 1:
+            g_part = jax.lax.psum(g_part, "data")     # combine D slices
+            u_part = jax.lax.psum(u_part, "data")
+        h = _act(g_part, cfg.activation) * u_part                     # [E_loc, cap, Fe]
+        y = jnp.einsum("ecf,efd->ecd", h, wd_loc.astype(cdt))         # [.., d_slice]
+        y = y.reshape(e_loc * cap, d_slice)
+
+        out_sl = jnp.zeros((t_g, d_slice), cdt).at[st].add(
+            y[jnp.minimum(slot, e_loc * cap - 1)]
+            * (sg * keep.astype(jnp.float32))[:, None].astype(cdt),
+            mode="drop",
+        )
+        out_sl = jax.lax.psum(out_sl, TP_AXIS)                        # expert combine
+        if nd_fsdp > 1:
+            out_full = jax.lax.all_gather(out_sl, "data", axis=1, tiled=True)
+        else:
+            out_full = out_sl                                          # [t_g, d]
+        # local batch rows for this (pod, data) shard
+        if not daxes:
+            return out_full.reshape(bl, sl, d)
+        shard_rows = bl * sl
+        idx = 0
+        for a in daxes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        out_loc = jax.lax.dynamic_slice_in_dim(out_full, idx * shard_rows,
+                                               shard_rows, axis=0)
+        return out_loc.reshape(bl, sl, d)
+
+    # expert weights keep their 2-D (model × data) storage regardless of
+    # cfg.fsdp (ParamDef.keep_fsdp) — the island always matches that layout
+    fsdp_d = "data" if nd_fsdp > 1 else None
+    batch_entry = daxes if daxes else None
+    return jax.shard_map(
+        island,
+        mesh=mesh,
+        in_specs=(
+            P(batch_entry, None, None),
+            P(None, None),
+            P(TP_AXIS, fsdp_d, None),
+            P(TP_AXIS, fsdp_d, None),
+            P(TP_AXIS, None, fsdp_d),
+        ),
+        out_specs=P(batch_entry, None, None),
+        check_vma=False,
+    )(x, params["router"], params["wg"], params["wu"], params["wd"])
+
+
+def moe(params, x, cfg):
+    """x [B, S, D] → [B, S, D]; experts sharded over the 'model' mesh axis."""
+    b, s, d = x.shape
+    mesh = active_mesh()
+    tp = axis_size(TP_AXIS)
+    e = cfg.n_experts
+
+    if (cfg.moe_weight_stationary and mesh is not None and tp > 1
+            and e % tp == 0
+            and d % max(1, mesh.shape.get("data", 1)) == 0):
+        out = _moe_weight_stationary(params, x, cfg, mesh, tp)
+        if cfg.n_shared_experts:
+            cdt = jnp.dtype(cfg.compute_dtype)
+            g = x @ params["shared_wg"].astype(cdt)
+            u = x @ params["shared_wu"].astype(cdt)
+            out = out + (_act(g, cfg.activation) * u) @ params["shared_wd"].astype(cdt)
+        return out
+
+    if mesh is None or tp == 1 or e % tp != 0:
+        out2d = _moe_local(
+            x.reshape(b * s, d), params["router"],
+            params["wg"], params["wu"], params["wd"], cfg, 0, 1,
+        )
+        out = out2d.reshape(b, s, d)
+    else:
+        e_loc = e // tp
+        from repro.distributed.api import _divisible
+        batch_entry = _divisible(
+            tuple(a for a in BATCH_AXES if a in mesh.axis_names), b, mesh)
+        batch_axes = (() if batch_entry is None
+                      else ((batch_entry,) if isinstance(batch_entry, str)
+                            else tuple(batch_entry)))
+
+        def island(x_loc, router, wg_loc, wu_loc, wd_loc):
+            bl, sl, _ = x_loc.shape
+            e0 = jax.lax.axis_index(TP_AXIS) * e_loc
+            part = _moe_local(
+                x_loc.reshape(bl * sl, d), router, wg_loc, wu_loc, wd_loc, cfg, e0, tp
+            )
+            return jax.lax.psum(part, TP_AXIS).reshape(bl, sl, d)
+
+        out = jax.shard_map(
+            island,
+            mesh=mesh,
+            in_specs=(
+                P(batch_axes, None, None),
+                P(None, None),
+                P(TP_AXIS, None, None),
+                P(TP_AXIS, None, None),
+                P(TP_AXIS, None, None),
+            ),
+            out_specs=P(batch_axes, None, None),
+            check_vma=False,
+        )(x, params["router"], params["wg"], params["wu"], params["wd"])
+
+    if cfg.n_shared_experts:
+        cdt = jnp.dtype(cfg.compute_dtype)
+        g = x @ params["shared_wg"].astype(cdt)
+        u = x @ params["shared_wu"].astype(cdt)
+        out = out + (_act(g, cfg.activation) * u) @ params["shared_wd"].astype(cdt)
+    return out

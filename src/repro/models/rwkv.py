@@ -1,0 +1,145 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Faithful to arXiv:2404.05892 §3 with one documented simplification: the
+token-shift interpolation weights are static learned vectors (the paper adds
+a low-rank data-dependent term to the mix weights too); the *decay* — the
+defining Finch feature — keeps its full LoRA data dependence:
+
+    w_t = exp(-exp(w0 + tanh(x̃_t W_a) W_b))          (per-channel, per-token)
+
+The recurrence itself runs through :mod:`repro.kernels.rwkv6` (Pallas kernel
+on single-device; chunked XLA scan under a mesh).  Heads are TP-sharded —
+each head's [Dh, Dh] state is shard-local, so the only collectives per block
+are the in/out projections' psums.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import BATCH_AXES, FSDP_AXIS, TP_AXIS, active_mesh, constrain
+from repro.kernels.rwkv6 import rwkv6_diff, rwkv6_ref
+from .layers import ParamDef
+
+
+def rwkv_defs(cfg) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    r = cfg.rwkv_decay_lora
+    dt = cfg.param_dtype
+    return {
+        # time-mix
+        "mu_r": ParamDef((d,), (None,), "normal", dt),
+        "mu_k": ParamDef((d,), (None,), "normal", dt),
+        "mu_v": ParamDef((d,), (None,), "normal", dt),
+        "mu_w": ParamDef((d,), (None,), "normal", dt),
+        "mu_g": ParamDef((d,), (None,), "normal", dt),
+        "wr": ParamDef((d, d), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wk": ParamDef((d, d), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wv": ParamDef((d, d), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "wg": ParamDef((d, d), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "w0": ParamDef((d,), (None,), "normal", "float32"),
+        "w_lora_a": ParamDef((d, r), (FSDP_AXIS, None), "fan_in", "float32"),
+        "w_lora_b": ParamDef((r, d), (None, TP_AXIS), "fan_in", "float32"),
+        "bonus_u": ParamDef((h, hd), (TP_AXIS, None), "normal", "float32"),
+        "ln_x": ParamDef((d,), (None,), "ones", dt),
+        "wo": ParamDef((d, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt),
+        # channel-mix
+        "cmu_k": ParamDef((d,), (None,), "normal", dt),
+        "cmu_r": ParamDef((d,), (None,), "normal", dt),
+        "ck": ParamDef((d, f), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "cv": ParamDef((f, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt),
+        "cr": ParamDef((d, d), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+    }
+
+
+def _token_shift(x: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """x_{t-1} per position; `state` carries the last token across calls."""
+    if state is None:
+        state = jnp.zeros_like(x[:, :1])
+    prev = jnp.concatenate([state[:, None] if state.ndim == 2 else state, x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu[None, None].astype(x.dtype)
+
+
+def rwkv_time_mix(
+    params, x, cfg, *,
+    shift_state: Optional[jnp.ndarray] = None,   # [B, D] last token
+    wkv_state: Optional[jnp.ndarray] = None,     # [B, H, Dh, Dh]
+    return_state: bool = False,
+):
+    b, t, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    prev, last = _token_shift(x, shift_state)
+    xr = _lerp(x, prev, params["mu_r"])
+    xk = _lerp(x, prev, params["mu_k"])
+    xv = _lerp(x, prev, params["mu_v"])
+    xw = _lerp(x, prev, params["mu_w"])
+    xg = _lerp(x, prev, params["mu_g"])
+
+    r = (xr @ params["wr"].astype(cdt)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ params["wk"].astype(cdt)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ params["wv"].astype(cdt)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ params["wg"].astype(cdt))
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x̃)))
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = params["w0"][None, None] + lora                       # [B, T, D]
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    r = constrain(r, BATCH_AXES, TP_AXIS, None, None)
+    k = constrain(k, BATCH_AXES, TP_AXIS, None, None)
+    v = constrain(v, BATCH_AXES, TP_AXIS, None, None)
+    w = constrain(w, BATCH_AXES, TP_AXIS, None, None)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if active_mesh() is None:
+        o, s_fin = rwkv6_diff(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            w.astype(jnp.float32), params["bonus_u"], wkv_state,
+            chunk=min(128, t),
+        )
+    else:
+        o, s_fin = rwkv6_ref(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            w.astype(jnp.float32), params["bonus_u"], wkv_state,
+        )
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+    # per-head group norm (ln_x), then gate
+    of = o.astype(jnp.float32).reshape(b, t, h, hd)
+    var = jnp.mean(of * of, axis=-1, keepdims=True)
+    of = of * jax.lax.rsqrt(var + 64e-5)
+    o = (of.reshape(b, t, d) * params["ln_x"][None, None].astype(jnp.float32)).astype(cdt)
+    out = (o * g) @ params["wo"].astype(cdt)
+    out = constrain(out, BATCH_AXES, None, None)
+    if return_state:
+        return out, (last, s_fin)
+    return out
+
+
+def rwkv_channel_mix(
+    params, x, cfg, *,
+    shift_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    prev, last = _token_shift(x, shift_state)
+    xk = _lerp(x, prev, params["cmu_k"])
+    xr = _lerp(x, prev, params["cmu_r"])
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"].astype(cdt)))
+    kk = constrain(kk, BATCH_AXES, None, TP_AXIS)
+    vv = kk @ params["cv"].astype(cdt)
+    rr = jax.nn.sigmoid(xr @ params["cr"].astype(cdt))
+    out = constrain(rr * vv, BATCH_AXES, None, None)
+    if return_state:
+        return out, last
+    return out

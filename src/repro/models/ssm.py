@@ -1,0 +1,138 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's attention-free layer.
+
+Faithful Mamba-1 recurrence (arXiv:2312.00752), TPU-adapted:
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t x_t) ⊗ B_t          h ∈ R^{Di × Ds}
+    y_t = h_t · C_t + D ⊙ x_t
+
+* The CUDA "selective scan" kernel fuses a sequential scan in SRAM; the TPU
+  adaptation is a *chunked associative scan*: `lax.scan` over sequence chunks
+  (bounding live memory to one chunk's [B, L, Di, Ds] tensor) with
+  `lax.associative_scan` inside the chunk (log-depth, VPU-friendly).  See
+  DESIGN.md §2 (assumption changes).
+* Di (= expand·d_model) is TP-sharded: every per-channel tensor partitions
+  cleanly on 'model'; the only cross-shard contractions are the small
+  x_proj/out_proj matmuls (one psum each, inserted by GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import BATCH_AXES, FSDP_AXIS, TP_AXIS, constrain
+from .layers import ParamDef
+
+
+def mamba_defs(cfg) -> Dict[str, ParamDef]:
+    d, di, ds, r, kc = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_d_state, cfg.dt_rank, cfg.ssm_d_conv
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamDef((d, 2 * di), (FSDP_AXIS, TP_AXIS), "fan_in", dt),
+        "conv_w": ParamDef((kc, di), (None, TP_AXIS), "fan_in", dt),
+        "conv_b": ParamDef((di,), (TP_AXIS,), "zeros", dt),
+        "x_proj": ParamDef((di, r + 2 * ds), (TP_AXIS, None), "fan_in", dt),
+        "dt_proj": ParamDef((r, di), (None, TP_AXIS), "fan_in", dt),
+        "dt_bias": ParamDef((di,), (TP_AXIS,), "zeros", "float32"),
+        "a_log": ParamDef((di, ds), (TP_AXIS, None), "ones", "float32"),
+        "d_skip": ParamDef((di,), (TP_AXIS,), "ones", "float32"),
+        "out_proj": ParamDef((di, d), (TP_AXIS, FSDP_AXIS), "fan_in", dt),
+    }
+
+
+def _depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    state: Optional[jnp.ndarray] = None):
+    """Causal depthwise conv over seq.  x [B, T, Di], w [K, Di].
+
+    Returns (y [B, T, Di], new_state [B, K-1, Di]) — state carries the last
+    K-1 inputs for decode continuation.
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                # [B, K-1+T, Di]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return y + b[None, None].astype(y.dtype), new_state
+
+
+def _ssm_chunk_scan(a: jnp.ndarray, bu: jnp.ndarray, h0: jnp.ndarray, chunk: int):
+    """Prefix recurrence h_t = a_t ⊙ h_{t-1} + bu_t over [B, T, Di, Ds].
+
+    Chunked: lax.scan over T/chunk carrying h, associative_scan inside.
+    Returns (h_all [B, T, Di, Ds], h_final [B, Di, Ds]).
+    """
+    b, t, di, ds = a.shape
+    l = min(chunk, t)
+    pad = -(-t // l) * l - t
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bu = jnp.pad(bu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = (t + pad) // l
+    a_c = a.reshape(b, nch, l, di, ds).transpose(1, 0, 2, 3, 4)
+    bu_c = bu.reshape(b, nch, l, di, ds).transpose(1, 0, 2, 3, 4)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    def step(h, inp):
+        a_i, bu_i = inp                                    # [B, L, Di, Ds]
+        pa, pb = jax.lax.associative_scan(combine, (a_i, bu_i), axis=1)
+        h_all = pa * h[:, None] + pb                       # h_t = A_t h0 + B_t
+        return h_all[:, -1], h_all
+
+    h_fin, h_chunks = jax.lax.scan(step, h0, (a_c, bu_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, nch * l, di, ds)
+    return h_all[:, :t], h_fin
+
+
+def mamba(
+    params, x, cfg, *,
+    conv_state: Optional[jnp.ndarray] = None,
+    ssm_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+    chunk: int = 256,
+):
+    """x [B, T, D] → [B, T, D] (+ (conv_state, ssm_state) when requested)."""
+    bsz, t, d = x.shape
+    di, ds = cfg.ssm_d_inner, cfg.ssm_d_state
+    r = cfg.dt_rank
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    xz = x @ params["in_proj"].astype(cdt)                  # [B, T, 2Di]
+    xz = constrain(xz, BATCH_AXES, None, TP_AXIS)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    xi, conv_state_new = _depthwise_conv(xi, params["conv_w"].astype(cdt),
+                                         params["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    xi = constrain(xi, BATCH_AXES, None, TP_AXIS)
+
+    dbc = xi @ params["x_proj"].astype(cdt)                 # [B, T, R+2Ds] (psum over Di)
+    dt_lo, b_ssm, c_ssm = jnp.split(dbc.astype(jnp.float32), [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(dt_lo @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"][None, None])   # [B, T, Di]
+    dt = constrain(dt, BATCH_AXES, None, TP_AXIS)
+
+    sdt = jnp.dtype(cfg.ssm_compute_dtype)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))       # [Di, Ds]
+    decay = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)  # [B, T, Di, Ds]
+    xf = xi.astype(jnp.float32)
+    bu = ((dt * xf)[..., None] * b_ssm[:, :, None, :]).astype(sdt)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((bsz, di, ds), jnp.float32)
+    h_all, h_fin = _ssm_chunk_scan(decay, bu, ssm_state.astype(sdt), chunk)
+    h_fin = h_fin.astype(jnp.float32)
+    y = jnp.einsum("btis,bts->bti", h_all.astype(jnp.float32), c_ssm)
+    y = y + params["d_skip"][None, None] * xf
+    y = (y.astype(cdt)) * jax.nn.silu(z)
+    y = constrain(y, BATCH_AXES, None, TP_AXIS)
+    out = y @ params["out_proj"].astype(cdt)
+    out = constrain(out, BATCH_AXES, None, None)
+    if return_state:
+        return out, (conv_state_new, h_fin)
+    return out

@@ -1,0 +1,105 @@
+"""Serving engine: batched prefill + continuous-batching decode.
+
+A deliberately small but real engine:
+
+* requests enter a queue; the engine packs up to `max_batch` live sequences;
+* prefill runs per request (left-padded into the shared KV cache capacity);
+* decode steps run the whole live batch through one jitted `decode` call;
+* finished sequences (EOS or budget) free their slot, the queue refills it
+  (continuous batching), and the cache slot is re-primed by the next
+  request's prefill.
+
+The decode step is the same `model.decode` the dry-run lowers for the
+``decode_32k`` / ``long_500k`` cells — serving and dry-run share one code
+path, which is the point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] token ids
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 cache_len: int = 128, greedy: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self._decode = jax.jit(self.model.decode)
+
+    def _prefill_one(self, prompt: np.ndarray):
+        toks = jnp.asarray(prompt[None], jnp.int32)
+        logits, cache, lengths = self.model.prefill(
+            self.params, {"tokens": toks}, cache_len=self.cache_len
+        )
+        return logits, cache, lengths
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Run all requests to completion with continuous batching."""
+        queue = list(requests)
+        # slots: per-slot state (cache is kept per-slot, batch=1, and decode
+        # batches are formed by stacking slot caches — simple and correct;
+        # a production engine would use a paged cache, noted in DESIGN.md)
+        live: List[Dict[str, Any]] = []
+
+        def admit():
+            while queue and len(live) < self.max_batch:
+                req = queue.pop(0)
+                t0 = time.perf_counter()
+                logits, cache, lengths = self._prefill_one(req.prompt)
+                tok = int(jnp.argmax(logits[0, -1]))
+                live.append({
+                    "req": req, "cache": cache, "lengths": lengths,
+                    "tokens": [tok], "t0": t0,
+                })
+
+        admit()
+        while live:
+            # stack slot caches into one batched decode call
+            caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *
+                                  [s["cache"] for s in live]) if len(live) > 1 \
+                else live[0]["cache"]
+            lengths = jnp.concatenate([s["lengths"] for s in live]) if len(live) > 1 \
+                else live[0]["lengths"]
+            last = jnp.asarray([[s["tokens"][-1]] for s in live], jnp.int32)
+            logits, caches, lengths = self._decode(self.params, caches, last, lengths)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+            done_idx = []
+            for i, slot in enumerate(live):
+                slot["tokens"].append(int(nxt[i]))
+                # unstack this slot's cache/lengths view
+                slot["cache"] = jax.tree.map(lambda x, i=i: x[:, i : i + 1], caches)
+                slot["lengths"] = lengths[i : i + 1]
+                req = slot["req"]
+                hit_eos = req.eos_id is not None and int(nxt[i]) == req.eos_id
+                if len(slot["tokens"]) >= req.max_new_tokens or hit_eos:
+                    req.output = slot["tokens"]
+                    req.latency_s = time.perf_counter() - slot["t0"]
+                    done_idx.append(i)
+            for i in reversed(done_idx):
+                live.pop(i)
+            admit()
+        return requests

@@ -1,0 +1,8 @@
+from .checkpoint import CheckpointManager
+from .optimizer import AdamW, AdamWState, constant_schedule, cosine_schedule
+from .trainer import TrainConfig, Trainer, make_train_step
+
+__all__ = [
+    "CheckpointManager", "AdamW", "AdamWState", "constant_schedule",
+    "cosine_schedule", "TrainConfig", "Trainer", "make_train_step",
+]

@@ -1,0 +1,89 @@
+"""Optimizers + schedules (no external deps): AdamW with sharded state.
+
+Moment dtype is configurable: ``moment_dtype="bfloat16"`` halves optimizer
+HBM (the ≥100B archs need it to fit the v5e budget — see EXPERIMENTS.md
+§Dry-run memory table); the update math still runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Pytree
+    v: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params: Pytree) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(z, params),
+            v=jax.tree.map(z, params),
+        )
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree
+               ) -> Tuple[Pytree, AdamWState, jnp.ndarray]:
+        """Returns (new_params, new_state, grad_norm)."""
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        if self.grad_clip:
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+
+        step = state.step + 1
+        lr = self.lr(step)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mh = mf / c1
+            vh = vf / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mf.astype(dt),
+                vf.astype(dt),
+            )
+
+        out = jax.tree.map(upd, params, gf, state.m, state.v)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step, new_m, new_v), gnorm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def constant_schedule(value: float):
+    return lambda step: jnp.full((), value, jnp.float32)

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+Required by the brief: every assigned arch instantiates a REDUCED config of
+its family and runs one forward/train step asserting output shapes + no NaNs.
+Full configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import SHAPES, build_model
+
+DECODER_ARCHS = [a for a in ARCH_IDS if not get_config(a).is_encdec]
+
+
+def _batch(cfg, rng, b=2, s=16):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend_feats"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, cfg.frontend_dim)), jnp.float32
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.frontend_dim)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    """One loss + grad step on the reduced config: shapes, finiteness."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    batch = _batch(cfg, rng)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch), has_aux=True
+    )(params)
+    assert jnp.isfinite(loss), arch
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.isfinite(g).all()), (arch, path)
+        assert float(jnp.abs(g.astype(jnp.float32)).max()) > 0.0, (arch, path, "dead grad")
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if not get_config(a).is_encdec])
+def test_smoke_logit_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    logits = model.forward(params, batch)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_decode_matches_forward(arch):
+    """Incremental decode (serve_step) reproduces teacher-forced logits."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    b, s = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 2)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["frontend_feats"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, cfg.frontend_dim)), jnp.float32
+        )
+    full = model.forward(params, batch)
+    lg, cache, lengths = model.prefill(params, {**batch, "tokens": toks[:, :s]}, cache_len=s + 4)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32), np.asarray(full[:, s - 1], np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+    for t in range(2):
+        lg, cache, lengths = model.decode(params, cache, toks[:, s + t : s + t + 1], lengths)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32), np.asarray(full[:, s + t], np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    cfg = get_config("seamless-m4t-medium").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    b, se, sd = 2, 10, 5
+    frames = jnp.asarray(rng.standard_normal((b, se, cfg.frontend_dim)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, sd)), jnp.int32)
+    mem = model.encode(params, frames)
+    full = model._logits(params, model._decode_stack_full(params, toks, mem))
+    cache, lengths = model.prefill(params, {"frames": frames}, cache_len=sd + 2)
+    for t in range(sd):
+        lg, cache, lengths = model.decode(params, cache, toks[:, t : t + 1], lengths)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32), np.asarray(full[:, t], np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Full-config structural assertions (the brief's exact numbers)
+# ---------------------------------------------------------------------------
+
+BRIEF = {
+    "qwen3-moe-235b-a22b": dict(n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+                                vocab=151936, n_experts=128, top_k=8, moe_d_ff=1536),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+                            vocab=163840, n_experts=384, top_k=8, moe_d_ff=2048),
+    "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+                        d_ff=9216, vocab=256000),
+    "gemma-2b": dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+                     d_ff=16384, vocab=256000, head_dim=256, activation="geglu"),
+    "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+                             d_ff=14336, vocab=131072),
+    "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+                           d_ff=5632, vocab=32000),
+    "llava-next-34b": dict(n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+                           d_ff=20480, vocab=64000),
+    "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+                                 d_ff=24576, vocab=65536, n_experts=16, top_k=2),
+    "rwkv6-3b": dict(n_layers=32, d_model=2560, d_ff=8960, vocab=65536),
+    "seamless-m4t-medium": dict(d_model=1024, n_heads=16, n_kv_heads=16,
+                                d_ff=4096, vocab=256206, enc_layers=12, dec_layers=12),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    cfg = get_config(arch)
+    for field, want in BRIEF[arch].items():
+        assert getattr(cfg, field) == want, (arch, field, getattr(cfg, field), want)
+
+
+def test_param_counts_close_to_advertised():
+    """Analytic param counts land near each architecture's nameplate size."""
+    expect = {
+        "qwen3-moe-235b-a22b": (235e9, 0.05),
+        "kimi-k2-1t-a32b": (1.0e12, 0.10),
+        "tinyllama-1.1b": (1.1e9, 0.05),
+        "mistral-nemo-12b": (12.2e9, 0.05),
+        "gemma-2b": (2.5e9, 0.05),
+        "llava-next-34b": (34e9, 0.05),
+        "jamba-1.5-large-398b": (398e9, 0.05),
+        "rwkv6-3b": (3.1e9, 0.05),
+    }
+    for arch, (want, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < tol, (arch, got, want)
+
+
+def test_active_params_match_a_suffix():
+    assert abs(get_config("qwen3-moe-235b-a22b").active_param_count() - 22e9) / 22e9 < 0.05
+    assert abs(get_config("kimi-k2-1t-a32b").active_param_count() - 32e9) / 32e9 < 0.15
+
+
+def test_long_500k_applicability():
+    """Sub-quadratic archs (and only those) run long_500k (DESIGN.md §4)."""
+    from repro.configs import shape_applies
+    runs = {a for a in ARCH_IDS if shape_applies(get_config(a), SHAPES["long_500k"])}
+    assert runs == {"rwkv6-3b", "jamba-1.5-large-398b"}

@@ -1,0 +1,97 @@
+"""Data pipeline invariants: determinism, sharding, duplication, featsel."""
+import numpy as np
+import pytest
+
+from repro.core import plar_reduce
+from repro.data import (
+    FeatureSelectedStream, TabularStream, TokenStream,
+    paper_dataset, scaled_paper_dataset,
+)
+
+
+def test_token_stream_restart_safe():
+    """batch(step) is a pure function — restart/elastic safety (DESIGN §3.4)."""
+    s = TokenStream(vocab=1000, seq_len=16, global_batch=8, seed=7)
+    a, b = s.batch(123), s.batch(123)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(s.batch(123)["tokens"], s.batch(124)["tokens"])
+
+
+def test_token_stream_shards_partition_global_batch():
+    s = TokenStream(vocab=100, seq_len=8, global_batch=12, seed=1)
+    full = s.batch(3)["tokens"]
+    parts = [s.shard(3, i, 3)["tokens"] for i in range(3)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_token_stream_labels_shifted():
+    s = TokenStream(vocab=50, seq_len=8, global_batch=2, seed=2)
+    b = s.batch(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_tabular_stream_deterministic():
+    t = TabularStream(n_rows=100, n_attrs=6, seed=5)
+    x1, d1 = t.table()
+    x2, d2 = t.table()
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_distinct_fraction_controls_duplication():
+    """KDD99-style redundancy: few distinct rows (the GrC payoff, Fig. 9)."""
+    dense = TabularStream(n_rows=5000, n_attrs=8, v_max=10, distinct_fraction=0.02,
+                          seed=3)
+    x, d = dense.table()
+    distinct = len(np.unique(np.concatenate([x, d[:, None]], axis=1), axis=0))
+    assert distinct <= 110     # ≈ 2% of 5000 prototypes
+    sparse = TabularStream(n_rows=5000, n_attrs=8, v_max=10, distinct_fraction=1.0,
+                           seed=3)
+    x2, _ = sparse.table()
+    distinct2 = len(np.unique(x2, axis=0))
+    assert distinct2 > 4000
+
+
+def test_paper_dataset_shapes_match_table5():
+    for name, rows, attrs in [("mushroom", 5644, 22), ("gisette", 6000, 5000),
+                              ("sdss", 320_000, 5201), ("kdd99", 5_000_000, 41)]:
+        t = paper_dataset(name)
+        assert (t.n_rows, t.n_attrs) == (rows, attrs), name
+
+
+def test_scaled_dataset_caps_dims():
+    t = scaled_paper_dataset("sdss", max_rows=1000, max_attrs=32)
+    x, d = t.table()
+    assert x.shape == (1000, 32)
+
+
+def test_feature_selected_stream_preserves_discernibility():
+    """The end-to-end contract: projecting onto the reduct keeps Θ(D|B)."""
+    from repro.core.oracle import theta_oracle
+
+    base = TabularStream(n_rows=300, n_attrs=8, redundancy=0.5, noise=0.0, seed=9)
+    x, d = base.table()
+    r = plar_reduce(x, d, delta="SCE")
+    xr, dr = FeatureSelectedStream(base, r.reduct).table()
+    assert xr.shape[1] == len(r.reduct)
+    np.testing.assert_allclose(
+        theta_oracle("SCE", xr, dr, list(range(xr.shape[1]))),
+        theta_oracle("SCE", x, d, list(range(x.shape[1]))),
+        rtol=1e-6, atol=1e-8,
+    )
+
+
+def test_grc_capacity_shrink_effective():
+    """After GrC init the working shapes track |U/A|, not |U| (§Perf fix)."""
+    import jax.numpy as jnp
+    from repro.core import build_granularity
+    from repro.core.reduction import plar_reduce as pr
+
+    t = TabularStream(n_rows=4000, n_attrs=6, v_max=3, distinct_fraction=0.01,
+                      seed=11)
+    x, d = t.table()
+    g = build_granularity(jnp.asarray(x), jnp.asarray(d), n_dec=2, v_max=3)
+    assert int(g.num) < 100
+    res = pr(x, d, delta="PR")          # runs through the shrunken capacity
+    from repro.core.oracle import reduct_oracle
+    assert res.reduct == reduct_oracle("PR", x, d)

@@ -1,0 +1,82 @@
+"""Shape/dtype sweeps + property tests: flash attention kernel vs oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+def _qkv(rng, b, hq, hkv, sq, skv, dh, dtype=np.float32):
+    q = rng.standard_normal((b, hq, sq, dh)).astype(dtype)
+    k = rng.standard_normal((b, hkv, skv, dh)).astype(dtype)
+    v = rng.standard_normal((b, hkv, skv, dh)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,dh,causal,window",
+    [
+        (2, 4, 2, 128, 128, 64, True, None),    # GQA 2:1
+        (1, 8, 1, 192, 192, 64, True, None),    # MQA
+        (2, 4, 4, 96, 160, 32, True, None),     # chunked prefill: sq < skv
+        (1, 4, 2, 256, 256, 64, True, 48),      # sliding window (jamba long-ctx)
+        (1, 2, 2, 64, 64, 128, False, None),    # encoder (bidirectional)
+        (1, 2, 1, 64, 64, 256, True, None),     # gemma head_dim=256
+        (1, 4, 4, 1, 160, 64, True, None),      # single-token decode
+    ],
+)
+def test_flash_matches_ref(b, hq, hkv, sq, skv, dh, causal, window):
+    rng = np.random.default_rng(b * 100 + sq)
+    q, k, v = _qkv(rng, b, hq, hkv, sq, skv, dh)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bkv=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng, 1, 4, 2, 128, 128, 64)
+    q, k, v = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=64, bkv=64)
+    ref = attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=0.05, atol=0.05
+    )
+
+
+@pytest.mark.parametrize("bq,bkv", [(32, 32), (64, 128), (128, 64), (256, 256)])
+def test_flash_block_shape_invariance(bq, bkv):
+    rng = np.random.default_rng(6)
+    q, k, v = _qkv(rng, 1, 4, 2, 200, 200, 64)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bkv=bkv)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of V rows (softmax property)."""
+    rng = np.random.default_rng(8)
+    q, k, v = _qkv(rng, 1, 2, 2, 64, 64, 32)
+    out = np.asarray(flash_attention(q, k, v, causal=True, bq=32, bkv=32))
+    vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+    assert out.min() >= vmin - 1e-4 and out.max() <= vmax + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sq=st.integers(1, 96),
+    extra_kv=st.integers(0, 64),
+    dh=st.sampled_from([16, 32, 64]),
+    group=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_property(sq, extra_kv, dh, group, causal, seed):
+    rng = np.random.default_rng(seed)
+    skv = sq + extra_kv
+    q, k, v = _qkv(rng, 1, 2 * group, 2, sq, skv, dh)
+    out = flash_attention(q, k, v, causal=causal, bq=32, bkv=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)

@@ -1,0 +1,131 @@
+"""End-to-end attribute reduction: PLAR/HAR/FSPA vs the Algorithm-1 oracle.
+
+The paper's effectiveness claim (Tables 6–9): all three algorithms select the
+*same* feature subsets.  We assert exactly that, across measures and modes.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fspa_reduce, har_reduce, plar_reduce
+from repro.core.oracle import reduct_oracle, theta_oracle
+
+DELTAS = ["PR", "SCE", "LCE", "CCE"]
+
+
+def _table(rng, n, a, vmax=3, m=2, redundancy=0.5):
+    """Random decision table with some redundant (duplicated) attributes."""
+    x = rng.integers(0, vmax, size=(n, a)).astype(np.int32)
+    # make some columns copies of others → non-trivial reducts
+    for j in range(a):
+        if rng.random() < redundancy and j > 0:
+            x[:, j] = x[:, rng.integers(0, j)]
+    d = rng.integers(0, m, size=(n,)).astype(np.int32)
+    return x, d
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_plar_matches_oracle(delta, seed):
+    rng = np.random.default_rng(seed)
+    x, d = _table(rng, 150, 7)
+    assert plar_reduce(x, d, delta=delta).reduct == reduct_oracle(delta, x, d)
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_har_fspa_plar_agree(delta):
+    """Paper Tables 6–9: identical 'Selected features' column."""
+    rng = np.random.default_rng(17)
+    x, d = _table(rng, 250, 9)
+    r_plar = plar_reduce(x, d, delta=delta).reduct
+    r_har = har_reduce(x, d, delta=delta).reduct
+    r_fspa = fspa_reduce(x, d, delta=delta).reduct
+    assert r_plar == r_har == r_fspa
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_spark_mode_equals_incremental(delta):
+    """Paper-faithful re-key path == beyond-paper incremental path."""
+    rng = np.random.default_rng(23)
+    x, d = _table(rng, 200, 8)
+    a = plar_reduce(x, d, delta=delta, mode="incremental").reduct
+    b = plar_reduce(x, d, delta=delta, mode="spark").reduct
+    assert a == b
+
+
+@pytest.mark.parametrize("backend", ["segment", "onehot", "pallas"])
+def test_contingency_backends_same_reduct(backend):
+    rng = np.random.default_rng(29)
+    x, d = _table(rng, 150, 6)
+    got = plar_reduce(x, d, delta="SCE", backend=backend).reduct
+    want = reduct_oracle("SCE", x, d)
+    assert got == want
+
+
+@pytest.mark.parametrize("mp_chunk", [1, 3, 16, 64])
+def test_mp_level_invariance(mp_chunk):
+    """Model-parallelism level (paper Table 12 knob) must not change results."""
+    rng = np.random.default_rng(31)
+    x, d = _table(rng, 150, 8)
+    got = plar_reduce(x, d, delta="LCE", mp_chunk=mp_chunk).reduct
+    want = reduct_oracle("LCE", x, d)
+    assert got == want
+
+
+def test_grc_init_invariance():
+    """Fig. 9 knob: GrC on/off changes cost, never the reduct."""
+    rng = np.random.default_rng(37)
+    x, d = _table(rng, 200, 7)
+    for delta in DELTAS:
+        a = plar_reduce(x, d, delta=delta, grc_init=True).reduct
+        b = plar_reduce(x, d, delta=delta, grc_init=False).reduct
+        assert a == b, delta
+
+
+def test_reduct_preserves_discernibility():
+    """The defining property: Θ(D|reduct) == Θ(D|C) for every measure."""
+    rng = np.random.default_rng(41)
+    x, d = _table(rng, 180, 8)
+    for delta in DELTAS:
+        r = plar_reduce(x, d, delta=delta)
+        theta_r = theta_oracle(delta, x, d, r.reduct)
+        np.testing.assert_allclose(theta_r, r.theta_full, rtol=1e-5, atol=1e-6)
+
+
+def test_core_subset_of_reduct():
+    """Core ⊆ Reduct (paper Fig. 2)."""
+    rng = np.random.default_rng(43)
+    x, d = _table(rng, 150, 8, redundancy=0.3)
+    for delta in DELTAS:
+        r = plar_reduce(x, d, delta=delta)
+        assert set(r.core) <= set(r.reduct)
+
+
+def test_max_features_stop_criterion():
+    rng = np.random.default_rng(47)
+    x, d = _table(rng, 200, 10, redundancy=0.0)
+    r = plar_reduce(x, d, delta="SCE", max_features=3, compute_core=False)
+    assert len(r.reduct) <= 3
+
+
+def test_deterministic_across_runs():
+    rng = np.random.default_rng(53)
+    x, d = _table(rng, 150, 7)
+    a = plar_reduce(x, d, delta="CCE").reduct
+    b = plar_reduce(x, d, delta="CCE").reduct
+    assert a == b
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(20, 120),
+    a=st.integers(2, 6),
+    delta=st.sampled_from(DELTAS),
+    seed=st.integers(0, 2**16),
+)
+def test_reduction_property(n, a, delta, seed):
+    rng = np.random.default_rng(seed)
+    x, d = _table(rng, n, a)
+    got = plar_reduce(x, d, delta=delta).reduct
+    want = reduct_oracle(delta, x, d)
+    assert got == want
