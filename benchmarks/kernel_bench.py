@@ -4,6 +4,9 @@ one; kernel *tiling* quality is assessed via the roofline, not wall time).
 
 Compares the XLA backends that execute in production on this host:
   contingency:  segment-sum vs one-hot-matmul (the MXU strategy in XLA form)
+  fused Θ:      materialize-[nc,K,M]-then-evaluate vs the fused schedule
+                (θ folded per bin tile — the Pallas kernel's schedule in XLA
+                form, DESIGN.md §5.2), across the four measures and shapes
   attention:    chunked-flash XLA vs naive S² (small shapes)
 """
 from __future__ import annotations
@@ -15,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import candidate_contingency
+from repro.core.plan import candidate_contingency, candidate_theta
 from repro.models.attention import _flash_xla
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -45,6 +48,48 @@ def contingency_backends(nc=32, g=65536, n_bins=256, m=8) -> List[Dict]:
     return rows
 
 
+def fused_theta_vs_unfused() -> List[Dict]:
+    """Fused contingency→Θ vs unfused across measures and (G, nc, K, M) shapes.
+
+    ``unfused`` materializes the [nc, K, M] contingency (one-hot backend, the
+    MXU strategy) and reduces it with ``measures.evaluate``; ``fused`` runs
+    the same accumulation with the θ epilogue folded per bin tile
+    (``backend="fused_xla"``) so the tensor never round-trips through memory.
+    ``hbm_mib_saved`` is the write+read traffic of that tensor — the bytes the
+    fused Pallas kernel removes from the TPU hot path.
+    """
+    shapes = [
+        # (g, nc, n_bins, m)
+        (16384, 16, 256, 2),
+        (16384, 64, 1024, 4),
+        (65536, 32, 512, 8),
+    ]
+    rows = []
+    for g, nc, n_bins, m in shapes:
+        rng = np.random.default_rng(g + nc)
+        packed = jnp.asarray(rng.integers(0, n_bins, (nc, g)), jnp.int32)
+        d = jnp.asarray(rng.integers(0, m, (g,)), jnp.int32)
+        w = jnp.asarray(rng.random(g), jnp.float32)
+        valid = jnp.ones((g,), bool)
+        n = float(np.asarray(w).sum())
+        for delta in ("PR", "SCE", "LCE", "CCE"):
+            def theta(backend):
+                return jax.jit(lambda p, dd, ww, vv, b=backend: candidate_theta(
+                    delta, p, dd, ww, vv, n, n_bins=n_bins, m=m, backend=b))
+
+            t_unfused = _time(theta("onehot"), packed, d, w, valid, reps=3)
+            t_fused = _time(theta("fused_xla"), packed, d, w, valid, reps=3)
+            rows.append({
+                "delta": delta,
+                "shape": f"g{g} nc{nc} K{n_bins} m{m}",
+                "unfused_ms": round(t_unfused * 1e3, 2),
+                "fused_ms": round(t_fused * 1e3, 2),
+                "speedup": round(t_unfused / t_fused, 2),
+                "hbm_mib_saved": round(2 * 4 * nc * n_bins * m / 2**20, 1),
+            })
+    return rows
+
+
 def attention_impls(b=1, h=8, s=1024, dh=64) -> List[Dict]:
     rng = np.random.default_rng(1)
     q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
@@ -64,5 +109,6 @@ def attention_impls(b=1, h=8, s=1024, dh=64) -> List[Dict]:
 
 ALL_BENCHES = {
     "contingency_backends": contingency_backends,
+    "fused_theta_vs_unfused": fused_theta_vs_unfused,
     "attention_impls": attention_impls,
 }

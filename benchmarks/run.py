@@ -2,11 +2,14 @@
 
 One section per paper table/figure (paper_tables.py) + kernel micro-benches.
 Pass table names to run a subset: ``python -m benchmarks.run table_12 fig_9``.
-Results are printed as aligned text and mirrored to benchmarks/results.json.
+Results are printed as aligned text and mirrored to benchmarks/results.json;
+``--tag NAME`` additionally snapshots them to ``benchmarks/BENCH_NAME.json``
+(timestamped), building the per-PR perf trajectory — see benchmarks/README.md.
 """
 from __future__ import annotations
 
 import json
+import re
 import sys
 import time
 
@@ -27,7 +30,17 @@ def main() -> None:
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
 
-    wanted = sys.argv[1:] or None
+    argv = sys.argv[1:]
+    tag = None
+    if "--tag" in argv:
+        i = argv.index("--tag")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.run [SECTION ...] [--tag NAME]")
+        tag = argv[i + 1]
+        if not re.fullmatch(r"[A-Za-z0-9._-]+", tag):
+            sys.exit(f"invalid --tag {tag!r}: use letters, digits, '.', '_', '-'")
+        argv = argv[:i] + argv[i + 2:]
+    wanted = argv or None
     jobs = {**ALL_TABLES, **ALL_BENCHES}
     if wanted:
         jobs = {k: v for k, v in jobs.items() if k in wanted}
@@ -43,6 +56,13 @@ def main() -> None:
     with open("benchmarks/results.json", "w") as f:
         json.dump(results, f, indent=2)
     print("\nwritten: benchmarks/results.json")
+
+    if tag is not None:
+        snap = f"benchmarks/BENCH_{tag}.json"
+        with open(snap, "w") as f:
+            json.dump({"tag": tag, "unix_time": int(time.time()),
+                       "sections": results}, f, indent=2)
+        print(f"written: {snap}")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,9 @@
 
 Runs the mesh-distributed MDP implementation (granules over 'data',
 candidates over 'model') on 8 simulated devices and validates it against the
-single-process PLAR and the brute-force oracle — then compares the two
+single-process PLAR and the brute-force oracle — then compares the three
 collective schedules (paper-faithful all_reduce vs beyond-paper
-reduce_scatter).
+reduce_scatter and fused; DESIGN.md §3.2).
 
 NOTE: must run as its own process (device count is locked at jax init).
 """
@@ -29,8 +29,9 @@ from repro.data import scaled_paper_dataset
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.api import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     x, d = scaled_paper_dataset("shuttle", max_rows=20000, max_attrs=9).table()
@@ -38,7 +39,7 @@ def main():
 
     for delta in ("PR", "SCE"):
         r_serial = plar_reduce(x, d, delta=delta)
-        for coll in ("all_reduce", "reduce_scatter"):
+        for coll in ("all_reduce", "reduce_scatter", "fused"):
             t0 = time.perf_counter()
             r = plar_reduce_distributed(x, d, mesh, delta=delta, collective=coll)
             dt = time.perf_counter() - t0

@@ -10,7 +10,13 @@ from .granularity import (
     row_fingerprints,
 )
 from .measures import MEASURES, evaluate, sig_inner, sig_outer, theta_rows
-from .plan import candidate_contingency, contingency_from_ids, ids_by_sort, subset_ids
+from .plan import (
+    candidate_contingency,
+    candidate_theta,
+    contingency_from_ids,
+    ids_by_sort,
+    subset_ids,
+)
 from .reduction import (
     ReductionResult,
     fspa_reduce,
@@ -34,6 +40,7 @@ __all__ = [
     "sig_inner",
     "sig_outer",
     "candidate_contingency",
+    "candidate_theta",
     "contingency_from_ids",
     "ids_by_sort",
     "subset_ids",

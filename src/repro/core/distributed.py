@@ -11,7 +11,7 @@ Mapping (DESIGN.md §2) — this *is* the paper's architecture, re-expressed:
     driver sum()                        θ rows summed on-shard (redundantly, post-psum)
     driver argmax                       host argmin over the gathered [A] thetas
 
-Two collective schedules for the contingency merge (the §Perf knob):
+Three collective schedules for the contingency merge (the §Perf knob):
 
 * ``all_reduce``      — paper-faithful DP: every data shard psums the full
   ``[nc_loc, K·V, m]`` contingency, then reduces θ locally.
@@ -19,6 +19,15 @@ Two collective schedules for the contingency merge (the §Perf knob):
   of contingency rows (θ is row-separable, Eq. 8!) and a scalar psum merges.
   Halves collective bytes and distributes the θ flops; exact because
   Θ(D|B) = Σ_i θ(S_i) commutes with row partitioning.
+* ``fused``           — beyond-paper (DESIGN.md §5.2): the driver re-shards
+  granules between iterations so every *current class* lives on one data
+  shard.  Then every packed key ``p = r·V + v`` — for every candidate — is
+  shard-local, each contingency row is complete on exactly one shard, and a
+  shard's fused contingency→Θ partial (θ of a row absent from the shard is
+  exactly 0) psums to the exact Θ[c]: cross-device payload O(nc·K·m) → O(nc).
+  Iterations whose class sizes don't pack into the per-shard capacity (e.g.
+  the first ones, where few large classes exist but K — and so the payload —
+  is still small) fall back to ``all_reduce`` transparently.
 
 Correctness notes:
 * Per-shard granularity tables may hold duplicate keys across shards — the
@@ -43,6 +52,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import measures
+from ..distributed.api import shard_map
 from .granularity import build_granularity
 from .plan import contingency_from_ids
 from .reduction import ReductionResult, _core_inner_thetas, _next_pow2
@@ -87,6 +97,21 @@ def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
         d32 = d.astype(jnp.int32)
         w_ = jnp.where(valid, w, 0).astype(jnp.float32)
 
+        if collective == "fused":
+            # Per-shard fused contingency→Θ partial + scalar psum.  Exact only
+            # under the driver's class-grouped placement (module docstring):
+            # rows this shard doesn't own are all-zero and contribute θ' = 0.
+            # Raw partials are psum'd *before* the single normalization so
+            # Θ_PR stays integer-exact across shard counts (tie-breaking
+            # determinism, see measures.evaluate).
+            from .plan import _theta_fused_xla_raw
+
+            x_cand = jnp.take(x, cand_cols, axis=1).T.astype(jnp.int32)
+            packed = r_ids[None, :] * v_max + x_cand          # [A_loc, G_loc]
+            raw = _theta_fused_xla_raw(
+                delta, packed, d32, w, valid, n_bins=n_bins, m=m)
+            return measures.theta_scale(delta, jax.lax.psum(raw, daxes), n)
+
         if fused_pack:
             def one(col):
                 x_col = jnp.take(x, col, axis=1).astype(jnp.int32)
@@ -115,7 +140,7 @@ def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
         cont = jax.lax.psum(cont, daxes)
         return measures.evaluate(delta, cont, n)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P("model"), P(daxes), P(daxes, None), P(daxes), P(daxes),
@@ -148,7 +173,7 @@ def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
         theta = measures.evaluate(delta, cont, n)
         return new_ids, k_new, theta
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(daxes), P(daxes), P(daxes), P(daxes), P(daxes), P()),
@@ -195,7 +220,7 @@ def _grc_build_step(mesh: Mesh, n_dec: int, v_max: int, capacity: int):
         return g.x, g.d, g.w, g.valid, jax.lax.psum(g.num, daxes), jax.lax.psum(
             g.n_total, daxes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(daxes, None), P(daxes), P(daxes)),
@@ -203,6 +228,69 @@ def _grc_build_step(mesh: Mesh, n_dec: int, v_max: int, capacity: int):
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# class-grouped placement for the fused schedule
+# ---------------------------------------------------------------------------
+
+
+def _regroup_by_class(gx, gd, gw, gvalid, r_ids, mesh):
+    """Re-shard granules so each current class id lives on one data shard.
+
+    The precondition of the ``fused`` collective (module docstring).  Classes
+    are packed onto shards least-loaded-first (LPT); returns the re-placed
+    arrays, or ``None`` when some shard would overflow its static capacity —
+    the caller then falls back to ``all_reduce`` for that iteration.
+    Feasibility is decided from ``r_ids``/``valid`` alone (O(G) gather); the
+    full O(G·A) granule table is pulled to the host only when packing
+    succeeds.  The Spark analogue is a ``partitionBy`` on the cached RDD, and
+    G ≪ N after GrC init.  (A production mesh implementation would use a
+    ragged all-to-all keyed on the class id instead of staging through the
+    host.)
+    """
+    nd = _n_data_shards(mesh)
+    if nd == 1:
+        # One data shard: class grouping holds trivially, nothing to move.
+        return gx, gd, gw, gvalid, r_ids
+    daxes = _data_axes(mesh)
+    cap = gx.shape[0]
+    cps = cap // nd
+    vh, rh = np.asarray(gvalid), np.asarray(r_ids)
+    live = np.nonzero(vh)[0]
+    classes, inverse, counts = np.unique(
+        rh[live], return_inverse=True, return_counts=True)
+
+    loads = np.zeros(nd, np.int64)
+    assign = np.empty(len(classes), np.int64)
+    for ci in np.argsort(-counts):
+        s = int(np.argmin(loads))
+        if loads[s] + counts[ci] > cps:
+            return None
+        assign[ci] = s
+        loads[s] += counts[ci]
+
+    xh, dh, wh = np.asarray(gx), np.asarray(gd), np.asarray(gw)
+    nx = np.zeros_like(xh)
+    nd_ = np.zeros_like(dh)
+    nw = np.zeros_like(wh)
+    nv = np.zeros_like(vh)
+    nr = np.zeros_like(rh)
+    offsets = np.arange(nd) * cps
+    for s in range(nd):
+        rows = live[assign[inverse] == s]
+        sl = slice(offsets[s], offsets[s] + len(rows))
+        nx[sl], nd_[sl], nw[sl], nr[sl] = xh[rows], dh[rows], wh[rows], rh[rows]
+        nv[sl] = True
+
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    return (
+        jax.device_put(nx, sh(daxes, None)),
+        jax.device_put(nd_, sh(daxes)),
+        jax.device_put(nw, sh(daxes)),
+        jax.device_put(nv, sh(daxes)),
+        jax.device_put(nr, sh(daxes)),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +310,7 @@ def plar_reduce_distributed(
     tol: float = 1e-6,
     tie_tol: float = 1e-5,
     max_features: Optional[int] = None,
-    collective: str = "all_reduce",     # | "reduce_scatter" (§Perf)
+    collective: str = "all_reduce",     # | "reduce_scatter" | "fused" (§Perf)
     compute_core: bool = True,
     grc_init: bool = True,
 ) -> ReductionResult:
@@ -313,7 +401,17 @@ def plar_reduce_distributed(
         cand[: len(remaining)] = remaining
         cand_dev = jax.device_put(cand, sh("model"))
 
-        ev = _eval_step(mesh, delta, n_bins, n_dec, v_max, collective)
+        iter_collective = collective
+        if collective == "fused":
+            regrouped = _regroup_by_class(gx, gd, gw, gvalid, r_ids, mesh)
+            if regrouped is None:
+                # Classes too large to pack (early iterations) — K is small
+                # then, so the all_reduce payload O(nc·K·m) is still cheap.
+                iter_collective = "all_reduce"
+            else:
+                gx, gd, gw, gvalid, r_ids = regrouped
+
+        ev = _eval_step(mesh, delta, n_bins, n_dec, v_max, iter_collective)
         thetas = np.asarray(ev(cand_dev, r_ids, gx, gd, gw, gvalid, n), np.float64)
         thetas = thetas[: len(remaining)]
         n_evals += len(remaining)

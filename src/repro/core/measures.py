@@ -21,55 +21,96 @@ from typing import Callable, Dict
 
 import jax.numpy as jnp
 
-__all__ = ["MEASURES", "theta_rows", "evaluate", "sig_inner", "sig_outer"]
+__all__ = [
+    "MEASURES", "RAW_ROWS", "theta_rows", "theta_scale", "evaluate",
+    "sig_inner", "sig_outer",
+]
 
 
 def _row_sums(cont: jnp.ndarray) -> jnp.ndarray:
     return cont.sum(axis=-1)
 
 
-def _theta_pr(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
-    """θ_PR = -|E_i|·1[|E_i/D|=1] / |U|  (class is pure → counts toward POS)."""
+# Every measure factors as  θ(S_i) = scale(n) · θ'(row_i)  with θ' depending
+# on the counts only.  The split is load-bearing: the fused Pallas kernel
+# (DESIGN.md §5.2) runs θ' as its epilogue with no scalar operands, and the
+# fused distributed schedule psums raw partials before scaling (linearity).
+# θ' of an all-zero row is exactly 0 for all four measures.
+
+
+def _rows_pr(cont: jnp.ndarray) -> jnp.ndarray:
+    """θ'_PR = |E_i|·1[|E_i/D|=1]  (class is pure → counts toward POS)."""
     e = _row_sums(cont)
     pure = (cont.max(axis=-1) == e) & (e > 0)
-    return -(e * pure.astype(cont.dtype)) / n
+    return e * pure.astype(cont.dtype)
 
 
-def _theta_sce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
-    """θ_SCE = -(1/|U|) Σ_j |D_ij| log(|D_ij|/|E_i|), with 0·log0 = 0."""
+def _rows_sce(cont: jnp.ndarray) -> jnp.ndarray:
+    """θ'_SCE = Σ_j |D_ij|·log(|D_ij|/|E_i|), with 0·log0 = 0."""
     e = _row_sums(cont)
     safe_c = jnp.where(cont > 0, cont, 1.0)
     safe_e = jnp.where(e > 0, e, 1.0)
     logs = jnp.log(safe_c) - jnp.log(safe_e)[..., None]
-    return -(jnp.where(cont > 0, cont * logs, 0.0)).sum(axis=-1) / n
+    return jnp.where(cont > 0, cont * logs, 0.0).sum(axis=-1)
 
 
-def _theta_lce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
-    """θ_LCE = Σ_j |D_ij|·(|E_i| - |D_ij|) / |U|²."""
+def _rows_lce(cont: jnp.ndarray) -> jnp.ndarray:
+    """θ'_LCE = Σ_j |D_ij|·(|E_i| - |D_ij|)."""
     e = _row_sums(cont)
-    return (cont * (e[..., None] - cont)).sum(axis=-1) / (n * n)
+    return (cont * (e[..., None] - cont)).sum(axis=-1)
 
 
-def _theta_cce(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
-    """θ_CCE = [|E_i|²(|E_i|-1) - Σ_j |D_ij|²(|D_ij|-1)] / (n²(n-1)).
+def _rows_cce(cont: jnp.ndarray) -> jnp.ndarray:
+    """θ'_CCE = |E_i|²(|E_i|-1) - Σ_j |D_ij|²(|D_ij|-1).
 
-    Follows Definition 2.9 literally: (|E|/n)·C²_|E|/C²_n = e²(e-1)/(n²(n-1)).
-    (The paper's Table 2 denominator ``|U|·C²_|U|`` is 2× this — a factor that
-    cancels in all significance comparisons; we keep the Def-2.9 scale so the
-    brute-force oracle and the decomposed path agree bit-for-bit.)
+    Follows Definition 2.9 literally: (|E|/n)·C²_|E|/C²_n = e²(e-1)/(n²(n-1))
+    after scaling.  (The paper's Table 2 denominator ``|U|·C²_|U|`` is 2×
+    this — a factor that cancels in all significance comparisons; we keep the
+    Def-2.9 scale so the brute-force oracle and the decomposed path agree
+    bit-for-bit.)
     """
     e = _row_sums(cont)
-    denom = jnp.maximum(n * n * (n - 1.0), 1.0)
     pos = e * e * jnp.maximum(e - 1.0, 0.0)
     neg = (cont * cont * jnp.maximum(cont - 1.0, 0.0)).sum(axis=-1)
-    return (pos - neg) / denom
+    return pos - neg
+
+
+RAW_ROWS: Dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
+    "PR": _rows_pr,
+    "SCE": _rows_sce,
+    "LCE": _rows_lce,
+    "CCE": _rows_cce,
+}
+
+
+def theta_scale(delta: str, raw: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Normalize unnormalized θ' values: the sign/|U| factor of each measure.
+
+    Linear in ``raw``, so it commutes with every summation — per-row, per
+    bin-tile, and per-shard raw partials may be summed/psum'd first and
+    scaled once.
+    """
+    n = jnp.asarray(n, jnp.float32)
+    if delta in ("PR", "SCE"):
+        return -raw / n
+    if delta == "LCE":
+        return raw / (n * n)
+    if delta == "CCE":
+        return raw / jnp.maximum(n * n * (n - 1.0), 1.0)
+    raise ValueError(f"unknown measure: {delta}")
+
+
+def _make_theta(delta: str):
+    def theta(cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+        return theta_scale(delta, RAW_ROWS[delta](cont), n)
+
+    theta.__name__ = f"_theta_{delta.lower()}"
+    theta.__doc__ = f"θ_{delta}(S_i) = theta_scale({delta!r}, θ'_{delta}, n)."
+    return theta
 
 
 MEASURES: Dict[str, Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = {
-    "PR": _theta_pr,
-    "SCE": _theta_sce,
-    "LCE": _theta_lce,
-    "CCE": _theta_cce,
+    delta: _make_theta(delta) for delta in RAW_ROWS
 }
 
 

@@ -15,7 +15,16 @@ Contingency backends (all bit-equivalent, asserted by tests):
 
 * ``segment`` — ``jax.ops.segment_sum`` (best on CPU; XLA scatter-add on TPU).
 * ``onehot``  — chunked one-hot matmul (the MXU strategy expressed in XLA).
-* ``pallas``  — the fused Pallas kernel (``repro.kernels.contingency``).
+* ``pallas``  — the Pallas contingency kernel (``repro.kernels.contingency``).
+
+Θ backends (:func:`candidate_theta`, DESIGN.md §5.2) additionally fold the
+measure's θ row-reduction into the contingency accumulation so the
+``[nc, K, M]`` tensor is never materialized in HBM:
+
+* ``fused``     — the fused contingency→Θ Pallas kernel.
+* ``fused_xla`` — the same schedule expressed in XLA: scan over bin tiles,
+  θ per finished tile, scalar accumulation (rows = bins, so every tile holds
+  complete rows — the property that makes the fusion exact).
 """
 from __future__ import annotations
 
@@ -25,12 +34,14 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import measures
 from .granularity import Granularity, row_fingerprints
 
 __all__ = [
     "ids_by_sort",
     "subset_ids",
     "candidate_contingency",
+    "candidate_theta",
     "contingency_from_ids",
     "theta_for_ids",
 ]
@@ -135,6 +146,85 @@ def candidate_contingency(
     raise ValueError(f"unknown contingency backend: {backend}")
 
 
+def _theta_fused_xla_raw(delta, packed, d, w, valid, *, n_bins, m, bin_chunk: int = 256):
+    """XLA rendition of the fused kernel's schedule (DESIGN.md §5.2).
+
+    Rows of the contingency table are bins, so a bin tile always holds
+    *complete* rows — the unnormalized θ' can be applied per tile and the
+    [nc, K, M] tensor is reduced to a scalar per candidate inside the scan
+    carry.  This is what the Pallas kernel does on TPU, expressed for
+    backends without Pallas support.
+
+    Returns *raw* partials: like the Pallas kernel, normalization stays with
+    the caller so raw sums/psums happen first and the measure's division
+    happens exactly once — keeping Θ_PR integer-exact across tilings and
+    shards (the determinism note in ``measures.evaluate``).
+    """
+    w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+    wd = w_[:, None] * jax.nn.one_hot(d, m, dtype=jnp.float32)  # [G, m]
+    n_chunks = -(-n_bins // bin_chunk)
+
+    def chunk(carry, c):
+        bins = c * bin_chunk + jnp.arange(bin_chunk)
+        onehot = (packed[:, :, None] == bins[None, None, :]).astype(jnp.float32)
+        tile = jnp.einsum("cgk,gm->ckm", onehot, wd)          # [nc, BK, m]
+        return carry + measures.RAW_ROWS[delta](tile).sum(-1), None
+
+    # Bins ≥ n_bins never occur in `packed`, so overhang tiles hold all-zero
+    # rows with θ' = 0 — no unpadding needed.
+    raw, _ = jax.lax.scan(
+        chunk, jnp.zeros((packed.shape[0],), jnp.float32),
+        jnp.arange(n_chunks))
+    return raw
+
+
+def _theta_fused_xla(delta, packed, d, w, valid, n, *, n_bins, m, bin_chunk: int = 256):
+    """Normalized Θ via the fused XLA schedule (single-process path)."""
+    raw = _theta_fused_xla_raw(
+        delta, packed, d, w, valid, n_bins=n_bins, m=m, bin_chunk=bin_chunk)
+    return measures.theta_scale(delta, raw, n)
+
+
+@partial(jax.jit, static_argnames=("delta", "n_bins", "m", "backend", "interpret"))
+def candidate_theta(
+    delta: str,
+    packed: jnp.ndarray,
+    d: jnp.ndarray,
+    w: jnp.ndarray,
+    valid: jnp.ndarray,
+    n,
+    *,
+    n_bins: int,
+    m: int,
+    backend: str = "segment",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Θ(D|B∪{a})[c] for a batch of candidates — the full MAP+REDUCE+sum.
+
+    ``segment``/``onehot``/``pallas`` materialize the contingency and reduce
+    it with :func:`repro.core.measures.evaluate`; ``fused``/``fused_xla`` fold
+    the θ epilogue into the accumulation (DESIGN.md §5.2) and never build the
+    [nc, K, M] tensor.
+    """
+    if backend == "fused":
+        from repro.kernels.contingency.ops import fused_theta
+
+        w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+        return fused_theta(
+            packed, d, w_, n, delta=delta, n_bins=n_bins, n_dec=m,
+            interpret=interpret)
+    if backend == "fused_xla":
+        return _theta_fused_xla(delta, packed, d, w, valid, n, n_bins=n_bins, m=m)
+    if backend not in ("segment", "onehot", "pallas"):
+        raise ValueError(
+            f"unknown Θ backend: {backend!r} "
+            "(one of: segment, onehot, pallas, fused, fused_xla)")
+    cont = candidate_contingency(
+        packed, d, w, valid, n_bins=n_bins, m=m, backend=backend,
+        interpret=interpret)
+    return measures.evaluate(delta, cont, n)
+
+
 def contingency_from_ids(ids, d, w, valid, *, n_bins: int, m: int) -> jnp.ndarray:
     """Single-subset contingency [n_bins, m] (used for Θ(D|R), Θ(D|C), core)."""
     return candidate_contingency(ids[None, :], d, w, valid, n_bins=n_bins, m=m)[0]
@@ -142,7 +232,5 @@ def contingency_from_ids(ids, d, w, valid, *, n_bins: int, m: int) -> jnp.ndarra
 
 def theta_for_ids(delta: str, ids, gran: Granularity, *, n_bins: int):
     """Θ(D|B) given exact class ids of U/B."""
-    from . import measures
-
     cont = contingency_from_ids(ids, gran.d, gran.w, gran.valid, n_bins=n_bins, m=gran.n_dec)
     return measures.evaluate(delta, cont, gran.n_total)

@@ -38,7 +38,7 @@ from .granularity import (
     pack_ids,
     row_fingerprints,
 )
-from .plan import candidate_contingency, contingency_from_ids, ids_by_sort, subset_ids
+from .plan import candidate_theta, contingency_from_ids, ids_by_sort, subset_ids
 
 __all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce", "raw_granularity"]
 
@@ -103,8 +103,9 @@ def _eval_chunk_incremental(delta, backend, n_bins, m, v_max):
     def run(r_ids, cand_cols, x, d, w, active, n, pr_correction):
         x_cand = jnp.take(x, cand_cols, axis=1).T          # [nc, G]
         packed = pack_ids(r_ids[None, :], x_cand, v_max)    # [nc, G]
-        cont = candidate_contingency(packed, d, w, active, n_bins=n_bins, m=m, backend=backend)
-        return measures.evaluate(delta, cont, n) + pr_correction
+        return candidate_theta(
+            delta, packed, d, w, active, n, n_bins=n_bins, m=m, backend=backend
+        ) + pr_correction
 
     return run
 
@@ -220,7 +221,7 @@ def plar_reduce(
     tie_tol: float = 1e-5,
     max_features: Optional[int] = None,
     mode: str = "incremental",          # "incremental" (optimized) | "spark" (paper-faithful)
-    backend: str = "segment",           # contingency backend
+    backend: str = "segment",           # Θ backend: segment|onehot|pallas|fused|fused_xla
     mp_chunk: int = 64,                  # model-parallelism level (paper Table 12 knob)
     grc_init: bool = True,               # paper Fig. 9 knob
     shrink: bool = False,                # FSPA universe shrinking

@@ -1,7 +1,7 @@
 from .api import (
     BATCH_AXES, FSDP_AXIS, TP_AXIS,
-    active_mesh, axis_size, batch_spec, constrain, mesh_batch_shards,
-    resolve_spec, sharding_for, use_mesh,
+    active_mesh, axis_size, batch_spec, constrain, make_mesh,
+    mesh_batch_shards, resolve_spec, shard_map, sharding_for, use_mesh,
 )
 from .compression import (
     compressed_grad_mean, compressed_psum_mean, dequantize_int8,
@@ -11,8 +11,8 @@ from .pipeline_parallel import pipeline_apply, pipeline_loss
 
 __all__ = [
     "BATCH_AXES", "FSDP_AXIS", "TP_AXIS",
-    "active_mesh", "axis_size", "batch_spec", "constrain", "mesh_batch_shards",
-    "resolve_spec", "sharding_for", "use_mesh",
+    "active_mesh", "axis_size", "batch_spec", "constrain", "make_mesh",
+    "mesh_batch_shards", "resolve_spec", "shard_map", "sharding_for", "use_mesh",
     "compressed_grad_mean", "compressed_psum_mean", "dequantize_int8",
     "init_error_state", "quantize_int8",
     "pipeline_apply", "pipeline_loss",

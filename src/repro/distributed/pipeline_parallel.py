@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .api import shard_map
+
 Pytree = Any
 
 
@@ -80,7 +82,7 @@ def pipeline_apply(
             )
             return out
 
-        return jax.shard_map(
+        return shard_map(
             local,
             mesh=mesh,
             in_specs=(

@@ -1,4 +1,13 @@
-from .ops import contingency
-from .ref import contingency_ref
+from .autotune import autotune_block_sizes, select_block_sizes
+from .ops import contingency, fused_theta, theta_scale
+from .ref import contingency_ref, fused_theta_ref
 
-__all__ = ["contingency", "contingency_ref"]
+__all__ = [
+    "contingency",
+    "contingency_ref",
+    "fused_theta",
+    "fused_theta_ref",
+    "theta_scale",
+    "select_block_sizes",
+    "autotune_block_sizes",
+]

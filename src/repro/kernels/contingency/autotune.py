@@ -1,0 +1,145 @@
+"""(BK, BG) block-size selection for the contingency kernels (DESIGN.md §5.2).
+
+Two layers, mirroring how production kernel libraries pick tilings:
+
+* :func:`select_block_sizes` — a zero-cost shape heuristic: MXU-aligned BK,
+  contraction depth BG sized so the per-step VMEM working set (packed tile +
+  wd tile + output/accumulator tile, double-buffered streams) stays under the
+  budget.  This is the default used by ``ops.contingency``/``ops.fused_theta``
+  when the caller passes ``bk=None``/``bg=None``.
+* :func:`autotune_block_sizes` — an explicit hook that *times* a small grid of
+  candidate tilings for one problem shape and caches the winner per
+  (shape, measure, fused) key.  Opt-in: interpret-mode timings (this host) are
+  correctness vehicles, so the hook only orders configs meaningfully on real
+  TPU backends — which is exactly where it is intended to run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128
+SUBLANE = 8
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024   # per-step working set cap (¼ of VMEM)
+
+# Candidate grid for the timing-based hook: MXU-aligned bin tiles × a range of
+# contraction depths.
+CANDIDATE_BK = (128, 256, 512)
+CANDIDATE_BG = (256, 512, 1024)
+
+_CACHE: Dict[Tuple, Tuple[int, int]] = {}
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def working_set_bytes(bk: int, bg: int, m: int) -> int:
+    """f32/int32 bytes resident per grid step.
+
+    packed tile + double-buffered wd stream + output/accumulator tile + the
+    [BK, BG] one-hot intermediate (the largest term for big tiles).
+    """
+    packed = 4 * bg
+    wd = 2 * 4 * bg * m          # double-buffered stream
+    acc = 4 * bk * m             # output/accumulator tile
+    onehot = 4 * bk * bg         # materialized before the dot
+    return packed + wd + acc + onehot
+
+
+def select_block_sizes(
+    n_bins: int,
+    g: int,
+    m: int,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> Tuple[int, int]:
+    """Shape heuristic: largest aligned (BK, BG) fitting the VMEM budget.
+
+    BK never exceeds the padded bin count (no all-padding bin tiles) and BG
+    never exceeds the padded granule count; both stay hardware-aligned
+    (sublane/lane multiples) so the one-hot matmul runs at full MXU occupancy.
+    """
+    bk = min(max(_round_up(n_bins, SUBLANE), SUBLANE), 512)
+    # Prefer a full 128-row MXU tile when there are enough bins to fill it.
+    if n_bins >= LANE:
+        bk = max(bk, LANE)
+        bk = min(bk, _round_up(n_bins, LANE))
+    bg = min(max(_round_up(g, LANE), LANE), 1024)
+    while bg > LANE and working_set_bytes(bk, bg, m) > vmem_budget:
+        bg //= 2
+    while bk > SUBLANE and working_set_bytes(bk, bg, m) > vmem_budget:
+        bk = max(_round_up(bk // 2, SUBLANE), SUBLANE)  # halve, stay aligned
+    return bk, bg
+
+
+def autotune_block_sizes(
+    nc: int,
+    g: int,
+    n_bins: int,
+    m: int,
+    *,
+    delta: Optional[str] = None,
+    reps: int = 3,
+    interpret: bool = True,
+    candidates: Optional[Tuple[Tuple[int, int], ...]] = None,
+) -> Tuple[int, int]:
+    """Time candidate tilings for one problem shape; cache and return the best.
+
+    ``delta=None`` tunes the unfused contingency kernel; a measure name tunes
+    the fused Θ kernel.  Results are memoized per (shape, delta, sweep) key so
+    the greedy loop pays the sweep once per (K, G) regime.
+    """
+    if candidates is not None:
+        candidates = tuple(tuple(c) for c in candidates)
+    key = (nc, g, n_bins, m, delta, interpret, reps, candidates)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    from .fused import fused_theta_pallas
+    from .kernel import contingency_pallas
+
+    m_pad = _round_up(max(m, 1), LANE)
+    rng = np.random.default_rng(0)
+    packed = jnp.asarray(rng.integers(0, n_bins, (nc, g)), jnp.int32)
+    wd = jnp.zeros((g, m_pad), jnp.float32).at[
+        jnp.arange(g), jnp.asarray(rng.integers(0, m, (g,)))
+    ].set(1.0)
+
+    if candidates is None:
+        # Fall back to the (budget-respecting) shape heuristic if no candidate
+        # fits — never time a tiling the VMEM filter just rejected.
+        candidates = tuple(
+            (bk, bg)
+            for bk in CANDIDATE_BK
+            for bg in CANDIDATE_BG
+            if working_set_bytes(bk, bg, m_pad) <= VMEM_BUDGET_BYTES
+        ) or (select_block_sizes(n_bins, g, m_pad),)
+
+    best, best_dt = select_block_sizes(n_bins, g, m_pad), float("inf")
+    for bk, bg in candidates:
+        if delta is None:
+            fn = lambda: contingency_pallas(
+                packed, wd, n_bins=n_bins, bk=bk, bg=bg, interpret=interpret)
+        else:
+            fn = lambda: fused_theta_pallas(
+                packed, wd, n_bins=n_bins, delta=delta, bk=bk, bg=bg,
+                interpret=interpret)
+        try:
+            jax.block_until_ready(fn())            # compile + warm
+        except Exception:
+            continue                               # invalid tiling on this backend
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+        if dt < best_dt:
+            best, best_dt = (bk, bg), dt
+
+    _CACHE[key] = best
+    return best

@@ -1,18 +1,46 @@
-"""Jit'd public wrapper for the contingency kernel.
+"""Jit'd public wrappers for the contingency kernels.
 
 Handles the TPU lane-width padding of the decision axis (M → multiple of 128)
-and unpadding of the result; callers see the logical ``[nc, n_bins, n_dec]``.
+and unpadding of the result; callers see the logical ``[nc, n_bins, n_dec]``
+(unfused) or ``[nc]`` (fused Θ).  Passing ``bk=None``/``bg=None`` defers the
+tiling to the shape heuristic in :mod:`repro.kernels.contingency.autotune`.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+# Re-exported for kernel callers: the row math and its normalization live in
+# one module (repro.core.measures).
+from repro.core.measures import theta_scale  # noqa: F401  (public re-export)
+
+from .autotune import select_block_sizes
+from .fused import fused_theta_pallas
 from .kernel import DEFAULT_BG, DEFAULT_BK, contingency_pallas
 
 LANE = 128
+
+
+def _resolve_blocks(n_bins: int, g: int, m_pad: int, bk, bg):
+    if bk is None or bg is None:
+        hk, hg = select_block_sizes(n_bins, g, m_pad)
+        bk = hk if bk is None else bk
+        bg = hg if bg is None else bg
+    return bk, bg
+
+
+def _lane_padded_wd(w: jnp.ndarray, d: jnp.ndarray, n_dec: int):
+    """w ⊙ one-hot(d) with the decision axis padded to the 128 lane width.
+
+    The single home of the kernels' padding contract: padded columns are
+    all-zero, so they contribute 0 to every count and every θ' epilogue.
+    """
+    m_pad = -(-n_dec // LANE) * LANE
+    wd = w[:, None] * (d[:, None] == jnp.arange(m_pad)[None, :]).astype(jnp.float32)
+    return wd, m_pad
 
 
 @partial(jax.jit, static_argnames=("n_bins", "n_dec", "bk", "bg", "interpret"))
@@ -23,12 +51,40 @@ def contingency(
     *,
     n_bins: int,
     n_dec: int,
-    bk: int = DEFAULT_BK,
-    bg: int = DEFAULT_BG,
+    bk: Optional[int] = DEFAULT_BK,
+    bg: Optional[int] = DEFAULT_BG,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """counts[c, k, j] = Σ_g w_g · 1[packed[c,g]=k] · 1[d_g=j]."""
-    m_pad = -(-n_dec // LANE) * LANE
-    wd = w[:, None] * (d[:, None] == jnp.arange(m_pad)[None, :]).astype(jnp.float32)
+    wd, m_pad = _lane_padded_wd(w, d, n_dec)
+    bk, bg = _resolve_blocks(n_bins, packed.shape[1], m_pad, bk, bg)
     out = contingency_pallas(packed, wd, n_bins=n_bins, bk=bk, bg=bg, interpret=interpret)
     return out[:, :, :n_dec]
+
+
+@partial(jax.jit, static_argnames=("delta", "n_bins", "n_dec", "bk", "bg", "interpret"))
+def fused_theta(
+    packed: jnp.ndarray,   # [nc, G] int32
+    d: jnp.ndarray,        # [G] int32
+    w: jnp.ndarray,        # [G] float32 (already masked: 0 on padding slots)
+    n,                     # |U| scalar — normalization only, never enters the kernel
+    *,
+    delta: str,
+    n_bins: int,
+    n_dec: int,
+    bk: Optional[int] = None,
+    bg: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Θ(D|B∪{a})[c] without materializing the [nc, K, M] contingency tensor.
+
+    Semantics: ``measures.evaluate(delta, contingency(...), n)`` with the θ
+    row-reduction fused into the kernel's accumulation epilogue (DESIGN.md
+    §5.2).  Default tiling comes from ``autotune.select_block_sizes``.
+    """
+    wd, m_pad = _lane_padded_wd(w, d, n_dec)
+    bk, bg = _resolve_blocks(n_bins, packed.shape[1], m_pad, bk, bg)
+    raw = fused_theta_pallas(
+        packed, wd, n_bins=n_bins, delta=delta, bk=bk, bg=bg, interpret=interpret
+    )
+    return theta_scale(delta, raw, n)

@@ -23,3 +23,25 @@ def contingency_ref(
     onehot_k = (packed[..., None] == jnp.arange(n_bins)[None, None, :]).astype(jnp.float32)
     wd = w[:, None] * (d[:, None] == jnp.arange(n_dec)[None, :]).astype(jnp.float32)
     return jnp.einsum("cgk,gm->ckm", onehot_k, wd)
+
+
+def fused_theta_ref(
+    packed: jnp.ndarray,  # [nc, G] int32
+    d: jnp.ndarray,       # [G]    int32
+    w: jnp.ndarray,       # [G]    float32 (0 for padding granules)
+    n,                    # |U| scalar
+    *,
+    delta: str,
+    n_bins: int,
+    n_dec: int,
+) -> jnp.ndarray:
+    """Oracle for the fused Θ kernel: unfused contingency + θ row-reduction.
+
+    This is the defining semantics of ``ops.fused_theta`` — materialize the
+    full contingency, then apply the measure's per-row sub-evaluation and sum
+    (``Θ(D|B) = Σ_i θ(S_i)``, paper §3.2).
+    """
+    from repro.core import measures
+
+    cont = contingency_ref(packed, d, w, n_bins=n_bins, n_dec=n_dec)
+    return measures.theta_rows(delta, cont, n).sum(axis=-1)

@@ -7,7 +7,8 @@ must set XLA_FLAGS before any jax call — see dryrun.py lines 1–2).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.distributed.api import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,7 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=None):
@@ -23,4 +24,4 @@ def make_host_mesh(shape=None, axes=None):
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n,), ("data",)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -26,7 +26,7 @@ def main():
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--mesh", default="4,2", help="data,model (distributed)")
     ap.add_argument("--collective", default="all_reduce",
-                    choices=["all_reduce", "reduce_scatter"])
+                    choices=["all_reduce", "reduce_scatter", "fused"])
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -36,12 +36,11 @@ def main():
                                 max_attrs=args.max_attrs).table()
 
     if args.distributed:
-        import jax
         from repro.core.distributed import plar_reduce_distributed
+        from repro.distributed.api import make_mesh
 
         shape = tuple(int(v) for v in args.mesh.split(","))
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh(shape, ("data", "model"))
         r = plar_reduce_distributed(x, d, mesh, delta=args.delta,
                                     max_features=args.max_features,
                                     collective=args.collective)

@@ -42,8 +42,9 @@ def main():
     if args.mesh:
         shape = tuple(int(v) for v in args.mesh.split(","))
         names = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(shape, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        from repro.distributed.api import make_mesh
+
+        mesh = make_mesh(shape, names)
 
     tc = TrainConfig(
         peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),

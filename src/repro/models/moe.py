@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.api import (
-    BATCH_AXES, FSDP_AXIS, TP_AXIS, active_mesh, axis_size,
+    BATCH_AXES, FSDP_AXIS, TP_AXIS, active_mesh, axis_size, shard_map,
 )
 from .layers import ParamDef
 from .mlp import _act
@@ -195,7 +195,7 @@ def _moe_weight_stationary(params, x, cfg, mesh, tp: int):
     # cfg.fsdp (ParamDef.keep_fsdp) — the island always matches that layout
     fsdp_d = "data" if nd_fsdp > 1 else None
     batch_entry = daxes if daxes else None
-    return jax.shard_map(
+    return shard_map(
         island,
         mesh=mesh,
         in_specs=(
@@ -251,7 +251,7 @@ def moe(params, x, cfg):
             )
             return jax.lax.psum(part, TP_AXIS).reshape(bl, sl, d)
 
-        out = jax.shard_map(
+        out = shard_map(
             island,
             mesh=mesh,
             in_specs=(

@@ -5,7 +5,8 @@ device_count=8 and asserts inside the subprocess; the parent only checks the
 exit code.  Covered:
 
 * distributed PLAR == serial PLAR == oracle, on ('data','model') and
-  ('pod','data','model') meshes, both collective schedules;
+  ('pod','data','model') meshes, all three collective schedules
+  (all_reduce / reduce_scatter / fused — DESIGN.md §3.2, §5.2);
 * int8 compressed psum with error feedback tracks the exact mean;
 * GPipe pipeline == sequential stack, forward and gradient;
 * elastic checkpoint restore across mesh shapes (4 devices → 8 devices).
@@ -32,8 +33,9 @@ def test_distributed_plar_matches_oracle():
 import numpy as np, jax
 from repro.core.distributed import plar_reduce_distributed
 from repro.core.oracle import reduct_oracle
+from repro.distributed.api import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 rng = np.random.default_rng(0)
 x = rng.integers(0, 3, size=(300, 8)).astype(np.int32)
 for j in range(1, 8):
@@ -42,7 +44,7 @@ for j in range(1, 8):
 d = rng.integers(0, 2, size=(300,)).astype(np.int32)
 for delta in ["PR", "SCE", "LCE", "CCE"]:
     want = reduct_oracle(delta, x, d)
-    for coll in ["all_reduce", "reduce_scatter"]:
+    for coll in ["all_reduce", "reduce_scatter", "fused"]:
         got = plar_reduce_distributed(x, d, mesh, delta=delta, collective=coll).reduct
         assert got == want, (delta, coll, got, want)
 """)
@@ -54,12 +56,14 @@ import numpy as np, jax
 from repro.core.distributed import plar_reduce_distributed
 from repro.core.oracle import reduct_oracle
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.distributed.api import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.default_rng(1)
 x = rng.integers(0, 3, size=(200, 6)).astype(np.int32)
 d = rng.integers(0, 2, size=(200,)).astype(np.int32)
-got = plar_reduce_distributed(x, d, mesh, delta="SCE").reduct
-assert got == reduct_oracle("SCE", x, d), got
+for coll in ["all_reduce", "fused"]:
+    got = plar_reduce_distributed(x, d, mesh, delta="SCE", collective=coll).reduct
+    assert got == reduct_oracle("SCE", x, d), (coll, got)
 """)
 
 
@@ -68,11 +72,12 @@ def test_compressed_psum_error_feedback():
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed import compressed_psum_mean
+from repro.distributed.api import make_mesh, shard_map
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 xs = rng.standard_normal((8, 64)).astype(np.float32)
-f = jax.jit(jax.shard_map(
+f = jax.jit(shard_map(
     lambda x, e: compressed_psum_mean(x + e, ("data",), n_shards=8),
     mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
     check_vma=False))
@@ -94,8 +99,9 @@ def test_pipeline_parallel_equivalence_and_grads():
     _run("""
 import jax, jax.numpy as jnp
 from repro.distributed import pipeline_apply, pipeline_loss
+from repro.distributed.api import make_mesh
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 S, M, mb, D = 4, 8, 2, 16
 Ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
 stage = lambda w, x: jnp.tanh(x @ w)
@@ -123,10 +129,11 @@ def test_elastic_checkpoint_restore_across_meshes():
 import tempfile, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import CheckpointManager
+from repro.distributed.api import make_mesh
 
 devs = jax.devices()
-mesh4 = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,), devices=np.array(devs[:4]))
-mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh4 = make_mesh((4,), ("data",), devices=np.array(devs[:4]))
+mesh8 = make_mesh((8,), ("data",))
 w = jax.device_put(np.arange(64.0).reshape(8, 8), NamedSharding(mesh4, P("data")))
 with tempfile.TemporaryDirectory() as d:
     mgr = CheckpointManager(d)
@@ -153,7 +160,8 @@ batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
 
 ref = model.forward(params, batch)   # no mesh: single-shard semantics
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.api import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 with use_mesh(mesh):
     sharded = jax.jit(model.forward)(params, batch)
 err = float(jnp.max(jnp.abs(ref - sharded)))

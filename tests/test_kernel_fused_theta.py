@@ -1,0 +1,188 @@
+"""Fused contingency→Θ kernel vs the unfused reference path (DESIGN.md §5.2).
+
+The fused kernel must reproduce ``measures.evaluate(delta,
+candidate_contingency(...), n)`` to ≤1e-5 for all four measures — including
+the edge cases the epilogues guard: all-padding tiles, pure classes (the θ_PR
+edge), and empty contingency cells (0·log 0 in θ_SCE).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hyp import given, settings, st  # optional-hypothesis shim: property tests skip on bare envs
+
+from repro.core import measures
+from repro.core.plan import candidate_contingency, candidate_theta
+from repro.kernels.contingency import (
+    autotune_block_sizes,
+    fused_theta,
+    fused_theta_ref,
+    select_block_sizes,
+    theta_scale,
+)
+
+DELTAS = ["PR", "SCE", "LCE", "CCE"]
+
+
+def _case(rng, nc, g, n_bins, m, zero_tail=0):
+    packed = rng.integers(0, n_bins, size=(nc, g)).astype(np.int32)
+    d = rng.integers(0, m, size=(g,)).astype(np.int32)
+    w = rng.integers(1, 5, size=(g,)).astype(np.float32)
+    if zero_tail:
+        w[-zero_tail:] = 0.0
+    return jnp.asarray(packed), jnp.asarray(d), jnp.asarray(w)
+
+
+def _unfused(delta, packed, d, w, n, *, n_bins, m):
+    valid = w > 0
+    cont = candidate_contingency(packed, d, w, valid, n_bins=n_bins, m=m)
+    return np.asarray(measures.evaluate(delta, cont, n))
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+@pytest.mark.parametrize(
+    "nc,g,n_bins,m",
+    [
+        (1, 64, 8, 2),
+        (3, 700, 37, 5),
+        (8, 1024, 128, 2),       # tile-aligned
+        (2, 1000, 130, 26),      # bins just over one tile
+        (5, 513, 300, 3),        # G just over one tile
+        (1, 33, 1, 2),           # single bin
+    ],
+)
+def test_fused_matches_unfused(delta, nc, g, n_bins, m):
+    rng = np.random.default_rng(nc * 1000 + g)
+    packed, d, w = _case(rng, nc, g, n_bins, m, zero_tail=g // 10)
+    n = float(np.asarray(w).sum())
+    got = np.asarray(fused_theta(packed, d, w, n, delta=delta, n_bins=n_bins, n_dec=m))
+    want = _unfused(delta, packed, d, w, n, n_bins=n_bins, m=m)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_fused_matches_ref_oracle(delta):
+    """Raw (unnormalized) kernel output vs the ref.py oracle definition."""
+    rng = np.random.default_rng(3)
+    packed, d, w = _case(rng, 4, 600, 50, 3)
+    n = float(np.asarray(w).sum())
+    got = np.asarray(fused_theta(packed, d, w, n, delta=delta, n_bins=50, n_dec=3))
+    want = np.asarray(fused_theta_ref(packed, d, w, n, delta=delta, n_bins=50, n_dec=3))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+@pytest.mark.parametrize("bk,bg", [(8, 64), (128, 128), (64, 512)])
+def test_fused_block_shape_invariance(delta, bk, bg):
+    """Θ must not depend on the BlockSpec tiling (epilogue runs per bin-tile)."""
+    rng = np.random.default_rng(7)
+    packed, d, w = _case(rng, 3, 500, 77, 4)
+    n = float(np.asarray(w).sum())
+    got = np.asarray(
+        fused_theta(packed, d, w, n, delta=delta, n_bins=77, n_dec=4, bk=bk, bg=bg))
+    want = _unfused(delta, packed, d, w, n, n_bins=77, m=4)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_all_padding_tiles(delta):
+    """Θ of an empty universe (w ≡ 0, sentinel keys) is exactly 0."""
+    packed = jnp.full((2, 100), -1, jnp.int32)
+    d = jnp.zeros((100,), jnp.int32)
+    w = jnp.zeros((100,), jnp.float32)
+    got = np.asarray(fused_theta(packed, d, w, 10.0, delta=delta, n_bins=40, n_dec=3))
+    np.testing.assert_array_equal(got, np.zeros(2, np.float32))
+
+
+def test_pure_classes_pr_edge():
+    """All-pure classes: γ = 1, so Θ_PR = -1 exactly; SCE/LCE/CCE = 0."""
+    rng = np.random.default_rng(11)
+    packed = jnp.asarray(rng.integers(0, 6, size=(3, 200)), jnp.int32)
+    d = np.asarray(packed[0]) % 2  # decision determined by candidate 0's key
+    w = jnp.ones((200,), jnp.float32)
+    got = np.asarray(
+        fused_theta(packed[:1], jnp.asarray(d), w, 200.0, delta="PR", n_bins=6, n_dec=2))
+    np.testing.assert_allclose(got, [-1.0], atol=1e-6)
+    for delta in ("SCE", "LCE", "CCE"):
+        got = np.asarray(
+            fused_theta(packed[:1], jnp.asarray(d), w, 200.0, delta=delta, n_bins=6, n_dec=2))
+        np.testing.assert_allclose(got, [0.0], atol=1e-6)
+
+
+def test_zero_log_zero_cells():
+    """Classes hitting only a subset of decisions: 0·log 0 ≝ 0 in θ_SCE."""
+    # bin 0 → decision 0 only; bin 1 → decisions 1,2; bin 2 never occurs.
+    packed = jnp.asarray([[0, 0, 1, 1, 1, 1]], jnp.int32)
+    d = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    w = jnp.ones((6,), jnp.float32)
+    n = 6.0
+    for delta in DELTAS:
+        got = np.asarray(fused_theta(packed, d, w, n, delta=delta, n_bins=3, n_dec=3))
+        want = _unfused(delta, packed, d, w, n, n_bins=3, m=3)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        assert np.isfinite(got).all()
+
+
+@pytest.mark.parametrize("backend", ["fused", "fused_xla"])
+@pytest.mark.parametrize("delta", DELTAS)
+def test_candidate_theta_backends_agree(backend, delta):
+    """plan.candidate_theta: fused backends == materialize-then-evaluate."""
+    rng = np.random.default_rng(13)
+    packed, d, w = _case(rng, 4, 600, 50, 3)
+    valid = w > 0
+    n = float(np.asarray(w).sum())
+    got = np.asarray(candidate_theta(
+        delta, packed, d, w, valid, n, n_bins=50, m=3, backend=backend))
+    want = np.asarray(candidate_theta(
+        delta, packed, d, w, valid, n, n_bins=50, m=3, backend="segment"))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+def test_theta_scale_linearity():
+    """theta_scale commutes with summation — the fused-collective invariant."""
+    rng = np.random.default_rng(17)
+    parts = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    n = 123.0
+    for delta in DELTAS:
+        merged = np.asarray(theta_scale(delta, parts.sum(0), n))
+        scaled = np.asarray(theta_scale(delta, parts, n).sum(0))
+        np.testing.assert_allclose(merged, scaled, rtol=1e-5, atol=1e-6)
+
+
+def test_select_block_sizes_sane():
+    bk, bg = select_block_sizes(300, 5000, 128)
+    assert bk % 8 == 0 and bg % 128 == 0
+    from repro.kernels.contingency.autotune import working_set_bytes, VMEM_BUDGET_BYTES
+    assert working_set_bytes(bk, bg, 128) <= VMEM_BUDGET_BYTES
+
+
+def test_autotune_hook_returns_valid_config():
+    """The timing hook must return a config that computes correct Θ."""
+    bk, bg = autotune_block_sizes(2, 300, 40, 3, delta="SCE", reps=1,
+                                  candidates=((8, 128), (16, 256)))
+    assert (bk, bg) in ((8, 128), (16, 256))
+    rng = np.random.default_rng(19)
+    packed, d, w = _case(rng, 2, 300, 40, 3)
+    n = float(np.asarray(w).sum())
+    got = np.asarray(
+        fused_theta(packed, d, w, n, delta="SCE", n_bins=40, n_dec=3, bk=bk, bg=bg))
+    want = _unfused("SCE", packed, d, w, n, n_bins=40, m=3)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nc=st.integers(1, 4),
+    g=st.integers(1, 300),
+    n_bins=st.integers(1, 64),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_theta_property(nc, g, n_bins, m, seed):
+    rng = np.random.default_rng(seed)
+    packed, d, w = _case(rng, nc, g, n_bins, m)
+    n = float(np.asarray(w).sum()) or 1.0
+    for delta in DELTAS:
+        got = np.asarray(fused_theta(packed, d, w, n, delta=delta, n_bins=n_bins, n_dec=m))
+        want = _unfused(delta, packed, d, w, n, n_bins=n_bins, m=m)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)

@@ -2,7 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional-hypothesis shim: property tests skip on bare envs
 
 from repro.kernels.rwkv6 import rwkv6_ref, rwkv6_scan
 

@@ -29,8 +29,8 @@ rng = np.random.default_rng(0)
 batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 8)), jnp.int32)}
 ref = model_ref.forward(params, batch)
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.distributed.api import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 model_ws = build_model(dataclasses.replace(cfg, moe_weight_stationary=True))
 with use_mesh(mesh):
     out = jax.jit(model_ws.forward)(params, batch)

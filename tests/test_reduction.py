@@ -5,7 +5,8 @@ The paper's effectiveness claim (Tables 6–9): all three algorithms select the
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional-hypothesis shim: property tests skip on bare envs
 
 from repro.core import fspa_reduce, har_reduce, plar_reduce
 from repro.core.oracle import reduct_oracle, theta_oracle
