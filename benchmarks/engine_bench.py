@@ -1,0 +1,108 @@
+"""End-to-end greedy-loop benchmark: host loop vs device-resident engine.
+
+The kernel micro-benches measure per-candidate evaluation; this section
+measures the thing the paper actually fights — per-*iteration* driver
+overhead.  ``engine="host"`` pays, every iteration: one jit dispatch per
+candidate chunk, an ``int(k_new)`` sync, a numpy gather for the argmin, and
+Python list mutation.  ``engine="device"`` runs the whole greedy loop as one
+``lax.while_loop`` (core/engine.py), so an iteration costs only its compute.
+
+Table shapes follow the paper's GrC premise (|U/A| ≪ |U|): attribute columns
+derive from a few latent factors, so tens of thousands of rows compress to a
+few hundred granules and the per-iteration cost is dispatch-dominated — the
+regime the engine exists for.  A dense-granule row (every row its own
+granule) is kept as the compute-bound reference: there the loop body
+dominates and the two engines are within noise of each other on CPU (XLA:CPU
+parallelizes top-level ops but runs while_loop bodies mostly single-threaded;
+on TPU/GPU this asymmetry disappears).
+
+Snapshot with ``python -m benchmarks.run --preset engine`` →
+``benchmarks/BENCH_engine.json`` — the end-to-end datapoint of the perf
+trajectory (benchmarks/README.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def _latent_table(n: int, a: int, n_latent: int, vmax: int, seed: int):
+    """Columns are relabelings of a few latent factors → small |U/A| after
+    GrC init, non-trivial reducts (≈ one attribute per informative factor)."""
+    rng = np.random.default_rng(seed)
+    z = rng.integers(0, vmax, size=(n, n_latent)).astype(np.int32)
+    cols = []
+    for _ in range(a):
+        src = rng.integers(0, n_latent)
+        perm = rng.permutation(vmax).astype(np.int32)
+        cols.append(perm[z[:, src]])
+    x = np.stack(cols, axis=1)
+    d = (z.sum(1) % 2).astype(np.int32)
+    return x, d
+
+
+def _dense_table(n: int, a: int, vmax: int, seed: int):
+    """No latent structure: nearly every row is its own granule."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, vmax, size=(n, a)).astype(np.int32)
+    for j in range(1, a):
+        if rng.random() < 0.4:
+            x[:, j] = x[:, rng.integers(0, j)]
+    d = rng.integers(0, 2, size=(n,)).astype(np.int32)
+    return x, d
+
+
+def engine_host_vs_device() -> List[Dict]:
+    """Per-iteration wall-clock, host loop vs device engine, same tables.
+
+    Each engine runs once to warm its compiles, then best-of-3 timed runs
+    (the host is a shared CPU; min damps contention noise).  Reducts are
+    asserted identical between engines on every shape.
+    """
+    from repro.core import plar_reduce
+
+    shapes = [
+        # (kind, rows, attrs, latent, vmax) — ≥32 attrs are the acceptance shapes
+        ("grc", 20000, 32, 5, 3),
+        ("grc", 50000, 48, 5, 3),
+        ("dense", 4000, 16, None, 3),
+    ]
+    rows = []
+    for kind, n, a, nl, vmax in shapes:
+        if kind == "grc":
+            x, d = _latent_table(n, a, nl, vmax, seed=n + a)
+        else:
+            x, d = _dense_table(n, a, vmax, seed=n + a)
+        out = {}
+        for engine in ("host", "device"):
+            def run():
+                return plar_reduce(x, d, delta="SCE", engine=engine,
+                                   compute_core=False, mp_chunk=64)
+
+            run()                       # warm: compiles for this shape
+            best, r = None, None
+            for _ in range(3):
+                r = run()
+                per = sum(r.per_iteration_s) / max(r.iterations, 1)
+                best = per if best is None else min(best, per)
+            out[engine] = (best, r)
+        t_host, r_host = out["host"]
+        t_dev, r_dev = out["device"]
+        assert r_host.reduct == r_dev.reduct, "engines disagree"
+        rows.append({
+            "table": f"{kind} n{n} A{a}" + (f" latent{nl}" if nl else ""),
+            "selected": len(r_dev.reduct),
+            "iterations": r_dev.iterations,
+            "host_per_iter_ms": round(t_host * 1e3, 2),
+            "device_per_iter_ms": round(t_dev * 1e3, 2),
+            "speedup": round(t_host / max(t_dev, 1e-9), 2),
+            "host_total_s": round(r_host.elapsed_s, 3),
+            "device_total_s": round(r_dev.elapsed_s, 3),
+        })
+    return rows
+
+
+ALL_ENGINE_BENCHES = {
+    "engine_host_vs_device": engine_host_vs_device,
+}

@@ -26,7 +26,16 @@ def _print_rows(name: str, rows) -> None:
         print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
 
 
+# Named section bundles: ``--preset NAME`` runs the bundle and snapshots it
+# as benchmarks/BENCH_NAME.json (an implicit --tag NAME).
+PRESETS = {
+    "engine": ["engine_host_vs_device"],
+    "kernels": ["contingency_backends", "fused_theta_vs_unfused"],
+}
+
+
 def main() -> None:
+    from .engine_bench import ALL_ENGINE_BENCHES
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
 
@@ -35,13 +44,21 @@ def main() -> None:
     if "--tag" in argv:
         i = argv.index("--tag")
         if i + 1 >= len(argv):
-            sys.exit("usage: python -m benchmarks.run [SECTION ...] [--tag NAME]")
+            sys.exit("usage: python -m benchmarks.run [SECTION ...] "
+                     "[--preset NAME] [--tag NAME]")
         tag = argv[i + 1]
         if not re.fullmatch(r"[A-Za-z0-9._-]+", tag):
             sys.exit(f"invalid --tag {tag!r}: use letters, digits, '.', '_', '-'")
         argv = argv[:i] + argv[i + 2:]
+    if "--preset" in argv:
+        i = argv.index("--preset")
+        if i + 1 >= len(argv) or argv[i + 1] not in PRESETS:
+            sys.exit(f"--preset expects one of: {', '.join(sorted(PRESETS))}")
+        preset = argv[i + 1]
+        argv = argv[:i] + [s for s in PRESETS[preset] if s not in argv] + argv[i + 2:]
+        tag = tag or preset
     wanted = argv or None
-    jobs = {**ALL_TABLES, **ALL_BENCHES}
+    jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES}
     if wanted:
         jobs = {k: v for k, v in jobs.items() if k in wanted}
 

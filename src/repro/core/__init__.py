@@ -1,4 +1,11 @@
 """PLAR core: GrC granularity representation + unified evaluation + reduction."""
+from .engine import (
+    DEVICE_BACKENDS,
+    SelectionState,
+    init_state,
+    make_engine_run,
+    make_engine_step,
+)
 from .granularity import (
     Granularity,
     build_granularity,
@@ -26,6 +33,11 @@ from .reduction import (
 )
 
 __all__ = [
+    "SelectionState",
+    "init_state",
+    "make_engine_step",
+    "make_engine_run",
+    "DEVICE_BACKENDS",
     "Granularity",
     "build_granularity",
     "regranulate",

@@ -53,6 +53,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import measures
 from ..distributed.api import shard_map
+from .engine import (
+    SelectionState,
+    _Cfg,
+    _MeshColl,
+    _advance,
+    _eval_mesh,
+    _make_cond_body,
+    init_state,
+    merge_candidate_cont,
+    run_engine,
+)
 from .granularity import build_granularity
 from .plan import contingency_from_ids
 from .reduction import ReductionResult, _core_inner_thetas, _next_pow2
@@ -129,16 +140,9 @@ def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
                 return jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1]
 
             cont = jax.vmap(one)(packed).reshape(-1, n_bins, m)   # [A_loc, nb, m]
-        if collective == "reduce_scatter" and nd > 1 and n_bins % nd == 0:
-            # θ is row-separable: scatter rows over data shards, θ locally,
-            # scalar psum.  Half the bytes of the all_reduce schedule.
-            cont_slice = jax.lax.psum_scatter(
-                cont, daxes, scatter_dimension=1, tiled=True
-            )                                                     # [A_loc, nb/nd, m]
-            theta_part = measures.theta_rows(delta, cont_slice, n).sum(-1)
-            return jax.lax.psum(theta_part, daxes)
-        cont = jax.lax.psum(cont, daxes)
-        return measures.evaluate(delta, cont, n)
+        # all_reduce / reduce_scatter schedules shared with the device engine
+        return merge_candidate_cont(
+            delta, cont, n, _MeshColl(daxes, nd, False), collective)
 
     fn = shard_map(
         local,
@@ -153,24 +157,23 @@ def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
 
 @lru_cache(maxsize=None)
 def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
-    """shard_map: fold the winning attribute into the shared reduction state."""
+    """shard_map: fold the winning attribute into the shared reduction state.
+
+    The pack → presence-psum → rank → contingency body is the engine's
+    ``_advance`` with a mesh collective adapter — one copy of the
+    shard-consistent compaction logic (DESIGN.md §3.1) for both drivers.
+    """
     daxes = _data_axes(mesh)
+    nd = _n_data_shards(mesh)
+    # only delta/m/v_max and the bin bound matter to _advance; n_bins here is
+    # the caller's (possibly bins_for-laddered) bound, always a v_max multiple
+    cfg = _Cfg(delta, "incremental", "segment", 0, n_bins // v_max, m, v_max,
+               0.0, 0.0, False, 0, 1)
 
     def local(a_col, r_ids, d, w, valid, n):
-        packed = r_ids * v_max + a_col
-        p_safe = jnp.where(valid, packed, 0)
-        presence = jnp.zeros((n_bins,), jnp.int32).at[p_safe].max(valid.astype(jnp.int32))
-        presence = jax.lax.psum(presence, daxes)                  # global agreement
-        presence = (presence > 0).astype(jnp.int32)
-        rank = jnp.cumsum(presence) - presence
-        new_ids = jnp.where(valid, rank[p_safe], 0)
-        k_new = presence.sum()
-
-        w_ = jnp.where(valid, w, 0).astype(jnp.float32)
-        seg = jnp.where(valid, new_ids * m + d, n_bins * m)
-        cont = jax.ops.segment_sum(w_, seg, num_segments=n_bins * m + 1)[:-1]
-        cont = jax.lax.psum(cont.reshape(n_bins, m), daxes)
-        theta = measures.evaluate(delta, cont, n)
+        coll = _MeshColl(daxes, nd, False)
+        new_ids, k_new, theta, _g_pure = _advance(
+            cfg, coll, r_ids, a_col, d, w, valid, n)
         return new_ids, k_new, theta
 
     fn = shard_map(
@@ -178,6 +181,58 @@ def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
         mesh=mesh,
         in_specs=(P(daxes), P(daxes), P(daxes), P(daxes), P(daxes), P()),
         out_specs=(P(daxes), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+@lru_cache(maxsize=None)
+def _engine_run_mesh(mesh: Mesh, delta: str, n_attrs: int, cap: int, m: int,
+                     v_max: int, tol: float, tie_tol: float, collective: str,
+                     max_sel: int):
+    """The device-resident greedy core (engine.py) wrapped in ``shard_map``.
+
+    One jitted while_loop runs the entire reduction: granules stay sharded
+    over the data axes, candidates over 'model', and the per-iteration
+    contingency merge uses the ``all_reduce``/``reduce_scatter`` collectives
+    of :func:`_eval_step` — but with zero host round-trips between
+    iterations.  The loop's cond/body are *the same code* the single-process
+    driver runs (engine._make_cond_body); only the collective adapter
+    differs.  ``n_bins = cap·v_max`` bounds the global packed-id range for
+    every iteration, so the loop compiles exactly once.
+
+    The ``fused`` collective is excluded: its class regrouping stages granule
+    tables through the host between iterations (module docstring), which is
+    fundamentally a host-loop schedule.
+    """
+    daxes = _data_axes(mesh)
+    nd = _n_data_shards(mesh)
+    nm = _n_model_shards(mesh)
+    has_model = "model" in mesh.axis_names
+    # cfg.cap is the *global* capacity: r_ids are globally-dense, so the
+    # packed-id bound K·V ≤ cap·V must cover all shards together.  The MP
+    # level on the mesh is the 'model' axis itself, so mp_chunk is inert.
+    cfg = _Cfg(delta, "incremental", "segment", n_attrs, cap, m, v_max,
+               tol, tie_tol, False, max_sel, n_attrs)
+
+    def local(st, x, d, w, n, theta_full, core_attrs, core_count):
+        coll = _MeshColl(daxes, nd, has_model)
+        cond, body = _make_cond_body(
+            cfg, coll,
+            lambda s: _eval_mesh(cfg, coll, collective, nm, s, x, d, w, n),
+            x, d, w, n, theta_full, core_attrs, core_count)
+        return jax.lax.while_loop(cond, body, st)
+
+    state_specs = SelectionState(
+        r_ids=P(daxes), h1=P(daxes), h2=P(daxes), active=P(daxes),
+        remaining=P(), theta_history=P(), order=P(), k=P(), theta_r=P(),
+        pr_correction=P(), n_selected=P())
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(state_specs, P(daxes, None), P(daxes), P(daxes), P(), P(),
+                  P(), P()),
+        out_specs=state_specs,
         check_vma=False,
     )
     return jax.jit(fn)
@@ -313,9 +368,24 @@ def plar_reduce_distributed(
     collective: str = "all_reduce",     # | "reduce_scatter" | "fused" (§Perf)
     compute_core: bool = True,
     grc_init: bool = True,
+    engine: str = "auto",               # "device" while_loop | "host" legacy loop
 ) -> ReductionResult:
     """PLAR Algorithm 2 on a ('pod','data','model') mesh.  See module doc."""
     t0 = time.perf_counter()
+    if collective not in ("all_reduce", "reduce_scatter", "fused"):
+        raise ValueError(
+            f"unknown collective: {collective!r} "
+            "(one of: all_reduce, reduce_scatter, fused)")
+    if engine not in ("auto", "host", "device"):
+        raise ValueError(
+            f"unknown engine: {engine!r} (one of: auto, host, device)")
+    if engine == "device" and collective == "fused":
+        raise ValueError(
+            "engine='device' cannot run the 'fused' collective: its class "
+            "regrouping stages granules through the host between iterations; "
+            "use engine='host'")
+    if engine == "auto":
+        engine = "host" if collective == "fused" else "device"
     x = np.asarray(x, np.int32)
     d = np.asarray(d, np.int32)
     if n_dec is None:
@@ -368,7 +438,27 @@ def plar_reduce_distributed(
         core = [int(a) for a in range(A) if inner[a] - theta_full > eps + tie_tol]
         n_evals += A
 
-    # --- distributed greedy loop state ---
+    if engine == "device":
+        # One shard_map(while_loop) call runs the whole reduction on device;
+        # jit places the replicated state leaves per the in_specs.
+        max_sel = int(max_features) if max_features is not None else A
+        runner = _engine_run_mesh(
+            mesh, delta, A, cap, n_dec, v_max, float(tol), float(tie_tol),
+            collective, max_sel)
+        reduct, theta_hist, iterations, ev, per_iter = run_engine(
+            runner, cap, A, gvalid, gx, gd, gw, n, theta_full, core)
+        return ReductionResult(
+            reduct=reduct,
+            core=core,
+            theta_full=theta_full,
+            theta_history=theta_hist,
+            iterations=iterations,
+            n_evaluations=n_evals + ev,
+            elapsed_s=time.perf_counter() - t0,
+            per_iteration_s=per_iter,
+        )
+
+    # --- distributed greedy loop state (engine == "host") ---
     r_ids = jax.device_put(np.zeros((cap,), np.int32), sh(daxes))
     k = 1
     reduct: List[int] = []
@@ -389,8 +479,10 @@ def plar_reduce_distributed(
     theta_r = theta_hist[-1] if theta_hist else float("inf")
     remaining = [a for a in range(A) if a not in reduct]
     iterations = 0
+    # f32-mirrored stop threshold: same iteration count as the device cond
+    stop_thresh = measures.f32_threshold(theta_full, tol)
 
-    while remaining and theta_r > theta_full + tol:
+    while remaining and theta_r > stop_thresh:
         if max_features is not None and len(reduct) >= max_features:
             break
         it0 = time.perf_counter()

@@ -1,0 +1,468 @@
+"""Device-resident greedy selection engine (DESIGN.md §3.5).
+
+The paper's PLAR loop (Algorithm 2) is "cache once, iterate on device", but
+the original drivers here were host-driven Python loops: every iteration
+synced ``int(k_new)``, gathered thetas to numpy for the argmin, mutated a
+Python ``remaining`` list, and re-jitted whenever ``bins_for(k)`` crossed a
+power of two.  That is exactly the per-iteration driver round-trip the paper
+fights in Spark, reintroduced at small scale.
+
+This module keeps the *whole* reduction on device:
+
+* :class:`SelectionState` — a pytree carrying everything the loop mutates:
+  current class ids ``r_ids``, the FSPA shrink mask ``active`` + PR
+  correction scalar, the remaining-attribute mask ``[A]``, a fixed
+  ``[A]``-slot ``theta_history`` buffer, the selection ``order`` buffer, and
+  the class count ``k``.
+* ``engine_step`` — one jitted greedy iteration: evaluate **all** candidates,
+  masked argmin-with-ties, fold the winner (presence-bitmap id compaction),
+  update history/shrink state.  All shapes are static: the packed-id range is
+  bounded by ``capacity · v_max`` for *every* iteration (ids are dense in
+  ``[0, K)`` with ``K ≤ capacity``), so one compile covers the whole run —
+  the host loop's ``bins_for(k)`` ladder trades per-iteration FLOPs for a
+  recompile per power of two; the engine trades padding FLOPs for zero
+  recompiles and zero host transfers.
+* ``engine_run`` — the full reduction (core folding + greedy loop + stopping
+  rule) as a single ``lax.while_loop``.  Core attributes are *forced*
+  selections for the first ``core_count`` iterations of the same loop, so
+  the core-fold/greedy/stopping/result-assembly logic exists exactly once.
+
+The same ``cond``/``body`` serve the mesh driver: collectives are injected
+via a tiny adapter (:class:`_LocalColl` is the identity; :class:`_MeshColl`
+psums contingencies over the data axes and all-gathers per-model-shard
+thetas), and :mod:`repro.core.distributed` wraps the loop in ``shard_map``.
+The ``fused`` collective schedule is the one consumer that *must* return to
+the host between iterations (its class re-grouping stages granule tables
+through the driver), so it stays on the legacy host loop — see
+``plar_reduce_distributed``.
+
+Where the host loop is still required (the ``engine="host"`` escape hatch):
+
+* ``backend="pallas"`` / ``"fused"`` — the interpret-mode Pallas kernels are
+  not exercised inside ``while_loop`` bodies;
+* ``collective="fused"`` — host-staged class regrouping (above);
+* per-iteration wall-clock introspection (the host loop times each iteration
+  individually; the engine reports the loop-average).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import measures
+from .granularity import dyn_column_terms, ids_from_presence, presence_bitmap
+from .plan import candidate_theta, contingency_from_ids, ids_by_sort
+
+__all__ = [
+    "SelectionState",
+    "init_state",
+    "make_engine_step",
+    "make_engine_run",
+    "unpack_result",
+    "DEVICE_BACKENDS",
+]
+
+# Θ backends that may run inside the while_loop body (DESIGN.md §3.5).
+DEVICE_BACKENDS = ("segment", "onehot", "fused_xla")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SelectionState:
+    """Everything the greedy loop mutates, as one device-resident pytree.
+
+    Shapes (``cap`` = granule capacity, ``A`` = number of attributes):
+
+      r_ids          [cap] int32   dense class ids of U/R (K ≤ cap)
+      h1, h2         [cap] uint32  linear-sketch fingerprints of R's columns
+                                   (spark mode only; zeros otherwise)
+      active         [cap] bool    live-granule mask (FSPA shrink)
+      remaining      [A]   bool    attributes not yet selected
+      theta_history  [A]   f32     Θ(D|R) after each selection (+inf unused)
+      order          [A]   i32     attribute selected at each iteration (-1)
+      k              []    i32     current class count K
+      theta_r        []    f32     Θ(D|R) incl. PR correction (+inf initial)
+      pr_correction  []    f32     FSPA PR-correction scalar
+      n_selected     []    i32     |R| = iteration counter
+    """
+
+    r_ids: jnp.ndarray
+    h1: jnp.ndarray
+    h2: jnp.ndarray
+    active: jnp.ndarray
+    remaining: jnp.ndarray
+    theta_history: jnp.ndarray
+    order: jnp.ndarray
+    k: jnp.ndarray
+    theta_r: jnp.ndarray
+    pr_correction: jnp.ndarray
+    n_selected: jnp.ndarray
+
+    def tree_flatten(self):
+        return (
+            self.r_ids, self.h1, self.h2, self.active, self.remaining,
+            self.theta_history, self.order, self.k, self.theta_r,
+            self.pr_correction, self.n_selected,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(cap: int, n_attrs: int, valid) -> SelectionState:
+    """Fresh state: one class (the whole universe), nothing selected."""
+    return SelectionState(
+        r_ids=jnp.zeros((cap,), jnp.int32),
+        h1=jnp.zeros((cap,), jnp.uint32),
+        h2=jnp.zeros((cap,), jnp.uint32),
+        active=jnp.asarray(valid, bool),
+        remaining=jnp.ones((n_attrs,), bool),
+        theta_history=jnp.full((n_attrs,), jnp.inf, jnp.float32),
+        order=jnp.full((n_attrs,), -1, jnp.int32),
+        k=jnp.int32(1),
+        theta_r=jnp.float32(jnp.inf),
+        pr_correction=jnp.float32(0.0),
+        n_selected=jnp.int32(0),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    """Static trace-time configuration (hashable → one compile per value)."""
+
+    delta: str
+    mode: str            # "incremental" | "spark"
+    backend: str         # DEVICE_BACKENDS
+    n_attrs: int
+    cap: int
+    m: int
+    v_max: int
+    tol: float
+    tie_tol: float
+    shrink: bool
+    max_sel: int         # max_features, or n_attrs when unbounded
+    mp_chunk: int        # candidates evaluated per inner step (memory bound)
+
+    @property
+    def n_bins(self) -> int:
+        # Static for the whole run: packed ids p = r·V + v live in [0, K·V)
+        # and K ≤ cap always, so cap·V bounds every iteration.  Padding rows
+        # are all-zero and contribute exactly 0 to every measure.
+        return self.cap * self.v_max
+
+
+# ---------------------------------------------------------------------------
+# collective adapters — the one seam between the two drivers
+# ---------------------------------------------------------------------------
+
+
+class _LocalColl:
+    """Single-process: every collective is the identity."""
+
+    n_data = 1
+    daxes = ()
+
+    def psum_data(self, x):
+        return x
+
+    def gather_model(self, thetas_local, n_attrs):
+        return thetas_local[:n_attrs]
+
+
+class _MeshColl:
+    """Inside ``shard_map``: granules sharded over the data axes, candidates
+    over 'model'.  Construct only inside the shard_map-traced function."""
+
+    def __init__(self, daxes, nd: int, has_model: bool):
+        self.daxes = daxes
+        self.n_data = nd
+        self.has_model = has_model
+
+    def psum_data(self, x):
+        return jax.lax.psum(x, self.daxes) if self.daxes else x
+
+    def gather_model(self, thetas_local, n_attrs):
+        if self.has_model:
+            thetas_local = jax.lax.all_gather(
+                thetas_local, "model", tiled=True)
+        return thetas_local[:n_attrs]
+
+
+# ---------------------------------------------------------------------------
+# the shared step pieces
+# ---------------------------------------------------------------------------
+
+
+def _advance(cfg: _Cfg, coll, r_ids, x_col, d, w, active, n):
+    """Fold one attribute into the class ids: pack → compact → Θ → purity.
+
+    The presence bitmap psums over data shards before ranking, so every shard
+    agrees on the global dense numbering (DESIGN.md §3.1) — with
+    :class:`_LocalColl` this is exactly ``granularity.compact_ids``.
+    """
+    nb = cfg.n_bins
+    packed = r_ids * cfg.v_max + x_col
+    presence = coll.psum_data(presence_bitmap(packed, active, nb))
+    new_ids, k_new = ids_from_presence(presence, packed, active)
+
+    w_ = jnp.where(active, w, 0).astype(jnp.float32)
+    seg = jnp.where(active, new_ids * cfg.m + d, nb * cfg.m)
+    cont = jax.ops.segment_sum(w_, seg, num_segments=nb * cfg.m + 1)[:-1]
+    cont = coll.psum_data(cont.reshape(nb, cfg.m))
+    theta = measures.evaluate(cfg.delta, cont, n)
+
+    e = cont.sum(-1)
+    pure_row = (cont.max(-1) == e) & (e > 0)
+    g_pure = pure_row[new_ids] & active
+    return new_ids, k_new.astype(jnp.int32), theta, g_pure
+
+
+def _eval_local(cfg: _Cfg, st: SelectionState, x, d, w, n):
+    """Single-process candidate evaluation: Θ(D|R∪{a}) for every a, [A]."""
+    cols = jnp.arange(cfg.n_attrs, dtype=jnp.int32)
+    if cfg.mode == "spark":
+        # Paper-faithful cost shape: re-key every granule from scratch per
+        # candidate (fingerprint sort), exactly `_eval_chunk_spark` but with
+        # the R-fingerprints maintained incrementally in the state (the
+        # linear-sketch property: h(R∪{a}) = h(R) + term_a, uint32-exact).
+        def one(col):
+            t1 = dyn_column_terms(x, col, 0)
+            t2 = dyn_column_terms(x, col, 7919)
+            ids, _k = ids_by_sort([st.h2 + t2, st.h1 + t1], st.active)
+            cont = contingency_from_ids(
+                ids, d, w, st.active, n_bins=cfg.cap, m=cfg.m)
+            return measures.evaluate(cfg.delta, cont, n)
+
+        return jax.lax.map(one, cols) + st.pr_correction
+
+    def chunk(cc):
+        x_cand = jnp.take(x, cc, axis=1).T                     # [nc, cap]
+        packed = st.r_ids[None, :] * cfg.v_max + x_cand
+        return candidate_theta(
+            cfg.delta, packed, d, w, st.active, n,
+            n_bins=cfg.n_bins, m=cfg.m, backend=cfg.backend)
+
+    # mp_chunk (the paper's MP level) bounds peak memory to
+    # [mp_chunk, n_bins, m] per inner step, exactly like the host loop's
+    # chunked dispatch; per-candidate values are independent, so chunking
+    # never changes bits.
+    nc = min(cfg.mp_chunk, cfg.n_attrs)
+    a_pad = -(-cfg.n_attrs // nc) * nc
+    if a_pad == nc:
+        return chunk(cols) + st.pr_correction
+    grid = (jnp.arange(a_pad, dtype=jnp.int32) % cfg.n_attrs).reshape(-1, nc)
+    thetas = jax.lax.map(chunk, grid).reshape(-1)[: cfg.n_attrs]
+    return thetas + st.pr_correction
+
+
+def merge_candidate_cont(delta, cont, n, coll, collective: str):
+    """Per-shard candidate contingency ``[nc, nb, m]`` → merged thetas [nc].
+
+    The §3.2 collective schedules, shared by both mesh step implementations
+    (this engine's ``_eval_mesh`` and the legacy ``distributed._eval_step``):
+    ``all_reduce`` psums the full contingency (paper-faithful DP);
+    ``reduce_scatter`` scatters contingency *rows* over the data shards,
+    reduces θ locally (row-separability, Eq. 8) and psums the scalar.
+    """
+    nb = cont.shape[1]
+    if collective == "reduce_scatter" and coll.n_data > 1 and nb % coll.n_data == 0:
+        cont_slice = jax.lax.psum_scatter(
+            cont, coll.daxes, scatter_dimension=1, tiled=True)
+        return jax.lax.psum(
+            measures.theta_rows(delta, cont_slice, n).sum(-1), coll.daxes)
+    return measures.evaluate(delta, coll.psum_data(cont), n)
+
+
+def _eval_mesh(cfg: _Cfg, coll: _MeshColl, collective, n_model, st, x, d, w, n):
+    """Mesh candidate evaluation: this shard's candidate slice → gather [A].
+
+    Contingencies merge via :func:`merge_candidate_cont`; ``n_bins = cap·V``
+    is divisible by the data-shard count because ``cap`` is itself
+    ``nd · cap_per_shard``.
+    """
+    a_pad = -(-cfg.n_attrs // n_model) * n_model
+    a_loc = a_pad // n_model
+    midx = jax.lax.axis_index("model") if coll.has_model else 0
+    cand = jnp.minimum(midx * a_loc + jnp.arange(a_loc, dtype=jnp.int32),
+                       cfg.n_attrs - 1)
+
+    w_ = jnp.where(st.active, w, 0).astype(jnp.float32)
+    d32 = d.astype(jnp.int32)
+    nb = cfg.n_bins
+    x_cand = jnp.take(x, cand, axis=1).T.astype(jnp.int32)     # [A_loc, G_loc]
+    packed = st.r_ids[None, :] * cfg.v_max + x_cand
+
+    def one(p):
+        seg = jnp.where(st.active, p * cfg.m + d32, nb * cfg.m)
+        return jax.ops.segment_sum(w_, seg, num_segments=nb * cfg.m + 1)[:-1]
+
+    cont = jax.vmap(one)(packed).reshape(-1, nb, cfg.m)        # [A_loc, nb, m]
+    th_loc = merge_candidate_cont(cfg.delta, cont, n, coll, collective)
+    return coll.gather_model(th_loc, cfg.n_attrs) + st.pr_correction
+
+
+def _make_cond_body(cfg: _Cfg, coll, eval_thetas, x, d, w, n, theta_full,
+                    core_attrs, core_count):
+    """The one greedy core: cond/body shared by both drivers.
+
+    ``eval_thetas(state) -> [A]`` is the injected evaluation strategy (local
+    or mesh-collective); everything else — forced core folds, masked
+    argmin-with-ties, advance, shrink, history — is identical code.
+    """
+
+    def cond(st: SelectionState):
+        in_core = st.n_selected < core_count
+        greedy = (
+            (st.n_selected < cfg.n_attrs)
+            & (st.theta_r > theta_full + cfg.tol)
+            & (st.n_selected < cfg.max_sel)
+        )
+        return in_core | greedy
+
+    def body(st: SelectionState):
+        forced = st.n_selected < core_count
+
+        def pick_core(st):
+            return core_attrs[jnp.minimum(st.n_selected, cfg.n_attrs - 1)]
+
+        def pick_greedy(st):
+            thetas = jnp.where(st.remaining, eval_thetas(st), jnp.inf)
+            # lowest index within tie_tol of the minimum — the device twin of
+            # measures.argmin_with_ties (remaining is index-ordered, so the
+            # first in-band slot is the same attribute the host loop picks).
+            return jnp.argmax(thetas <= thetas.min() + cfg.tie_tol).astype(jnp.int32)
+
+        best = jax.lax.cond(forced, pick_core, pick_greedy, st)
+        x_col = jnp.take(x, best, axis=1)
+        new_ids, k_new, theta, g_pure = _advance(
+            cfg, coll, st.r_ids, x_col, d, w, st.active, n)
+        theta_rec = theta + st.pr_correction   # correction *before* this fold
+
+        if cfg.mode == "spark":
+            h1 = st.h1 + dyn_column_terms(x, best, 0)
+            h2 = st.h2 + dyn_column_terms(x, best, 7919)
+        else:
+            h1, h2 = st.h1, st.h2
+
+        if cfg.shrink:
+            active = st.active & ~g_pure
+            if cfg.delta == "PR":
+                shed = jnp.sum(jnp.where(g_pure, w, 0)).astype(jnp.float32)
+                pr_corr = st.pr_correction - shed / jnp.asarray(n, jnp.float32)
+            else:
+                pr_corr = st.pr_correction
+        else:
+            active, pr_corr = st.active, st.pr_correction
+
+        return SelectionState(
+            r_ids=new_ids,
+            h1=h1,
+            h2=h2,
+            active=active,
+            remaining=st.remaining.at[best].set(False),
+            theta_history=st.theta_history.at[st.n_selected].set(theta_rec),
+            order=st.order.at[st.n_selected].set(best),
+            k=k_new,
+            theta_r=theta_rec,
+            pr_correction=pr_corr,
+            n_selected=st.n_selected + 1,
+        )
+
+    return cond, body
+
+
+# ---------------------------------------------------------------------------
+# public entry points (cached per static config → one compile each)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
+                     cap: int, m: int, v_max: int, tol: float, tie_tol: float,
+                     shrink: bool, max_sel: int, mp_chunk: int = 64):
+    """One jitted greedy iteration (evaluate → argmin → advance).
+
+    Exposed for inspection/benchmarks; ``make_engine_run`` inlines the same
+    body into its while_loop, so a full reduction costs one compile, not two.
+    """
+    cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
+               shrink, max_sel, mp_chunk)
+
+    @jax.jit
+    def step(st: SelectionState, x, d, w, n, theta_full, core_attrs,
+             core_count) -> SelectionState:
+        coll = _LocalColl()
+        _, body = _make_cond_body(
+            cfg, coll, lambda s: _eval_local(cfg, s, x, d, w, n),
+            x, d, w, n, theta_full, core_attrs, core_count)
+        return body(st)
+
+    return step
+
+
+@lru_cache(maxsize=None)
+def make_engine_run(delta: str, mode: str, backend: str, n_attrs: int,
+                    cap: int, m: int, v_max: int, tol: float, tie_tol: float,
+                    shrink: bool, max_sel: int, mp_chunk: int = 64):
+    """The full reduction as one ``lax.while_loop`` (single-process)."""
+    cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
+               shrink, max_sel, mp_chunk)
+
+    @jax.jit
+    def run(st: SelectionState, x, d, w, n, theta_full, core_attrs,
+            core_count) -> SelectionState:
+        coll = _LocalColl()
+        cond, body = _make_cond_body(
+            cfg, coll, lambda s: _eval_local(cfg, s, x, d, w, n),
+            x, d, w, n, theta_full, core_attrs, core_count)
+        return jax.lax.while_loop(cond, body, st)
+
+    return run
+
+
+def run_engine(runner, cap: int, n_attrs: int, valid, x, d, w, n,
+               theta_full: float, core):
+    """Init-state → jitted loop → unpack: the device path shared verbatim by
+    both drivers (``plar_reduce`` and ``plar_reduce_distributed``).
+
+    Returns ``(reduct, theta_history, iterations, n_evals, per_iteration_s)``
+    where ``per_iteration_s`` is the loop average over every executed body
+    (the core folds run inside the same while_loop, eval-free and cheaper).
+    """
+    import time
+
+    core_arr = np.zeros((max(n_attrs, 1),), np.int32)
+    core_arr[: len(core)] = core
+    st = init_state(cap, n_attrs, valid)
+    t_loop = time.perf_counter()
+    fin = jax.block_until_ready(
+        runner(st, x, d, w, n, jnp.float32(theta_full),
+               jnp.asarray(core_arr), jnp.int32(len(core))))
+    loop_s = time.perf_counter() - t_loop
+    reduct, hist, iters, n_evals = unpack_result(fin, len(core))
+    per_body = loop_s / len(reduct) if reduct else 0.0
+    return reduct, hist, iters, n_evals, [per_body] * iters
+
+
+def unpack_result(fin: SelectionState, core_count: int):
+    """Host-side unpack: (reduct, theta_history, greedy_iterations, n_evals).
+
+    The single device→host transfer of the whole greedy phase.
+    """
+    nsel = int(fin.n_selected)
+    order = np.asarray(fin.order)[:nsel]
+    reduct = [int(a) for a in order]
+    hist = [float(t) for t in np.asarray(fin.theta_history)[:nsel]]
+    iters = nsel - core_count
+    n_attrs = fin.remaining.shape[0]
+    # the engine evaluates ALL A candidates each greedy iteration (already-
+    # selected ones are masked after the fact — static shapes); report that
+    # true count, which is ≥ the host loop's shrinking len(remaining)
+    n_evals = iters * n_attrs
+    return reduct, hist, iters, n_evals

@@ -32,6 +32,7 @@ __all__ = [
     "Granularity",
     "build_granularity",
     "column_terms",
+    "dyn_column_terms",
     "row_fingerprints",
     "regranulate",
     "pack_ids",
@@ -60,6 +61,12 @@ def _column_seeds(n_cols: int, seed: int) -> np.ndarray:
     col_seed = (idx * np.uint64(_GOLDEN) + np.uint64(seed) * np.uint64(0x85EBCA6B)) & mask
     mult = (((col_seed ^ (col_seed >> np.uint64(13))) * np.uint64(0xC2B2AE35)) & mask) | np.uint64(1)
     return np.stack([col_seed, mult], axis=0).astype(np.uint32)  # [2, n_cols]
+
+
+def dyn_column_terms(x: jnp.ndarray, col: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """:func:`column_terms` for a *traced* column index (dynamic gather)."""
+    seeds = jnp.asarray(_column_seeds(x.shape[1], seed))
+    return _mix32(x[:, col].astype(jnp.uint32) ^ seeds[0, col]) * seeds[1, col]
 
 
 def column_terms(x_col: jnp.ndarray, col_index: int, n_cols: int, seed: int) -> jnp.ndarray:

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "MEASURES", "RAW_ROWS", "theta_rows", "theta_scale", "evaluate",
-    "sig_inner", "sig_outer",
+    "sig_inner", "sig_outer", "argmin_with_ties", "f32_threshold",
 ]
 
 
@@ -138,17 +138,34 @@ def evaluate(delta: str, cont: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
     return theta_rows(delta, cont, n).sum(axis=-1)
 
 
+def f32_threshold(base, tol) -> float:
+    """``base + tol`` rounded exactly as the device engine's f32 arithmetic.
+
+    Every host-side comparison that must agree with an in-loop f32 compare
+    (the argmin tie band, both drivers' stopping thresholds) goes through
+    this one helper: the engine='host' vs 'device' bit-identical contract
+    rests on the threshold arithmetic matching, so it must not be re-derived
+    ad hoc at call sites.
+    """
+    import numpy as np
+
+    return float(np.float32(np.float32(base) + np.float32(tol)))
+
+
 def argmin_with_ties(values, tol: float = 1e-5) -> int:
     """Lowest index whose value is within ``tol`` of the minimum.
 
     Greedy selection must break Θ ties identically across float32 summation
     orders (incremental vs spark vs distributed) and vs the float64 oracle;
-    a tolerance band + lowest-index rule does that.
+    a tolerance band + lowest-index rule does that.  The band edge
+    ``min + tol`` is :func:`f32_threshold` to mirror the device engine's
+    in-loop argmin bit-for-bit (engine.py pick_greedy): the candidate values
+    are f32-representable on every path, so equal thresholds ⇒ equal bands.
     """
     import numpy as np
 
     v = np.asarray(values, np.float64)
-    return int(np.nonzero(v <= v.min() + tol)[0][0])
+    return int(np.nonzero(v <= f32_threshold(v.min(), tol))[0][0])
 
 
 def sig_inner(theta_without: jnp.ndarray, theta_with: jnp.ndarray) -> jnp.ndarray:

@@ -30,10 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import measures
+from .engine import DEVICE_BACKENDS, make_engine_run, run_engine
 from .granularity import (
     Granularity,
     build_granularity,
     column_terms,
+    dyn_column_terms,
     compact_ids,
     pack_ids,
     row_fingerprints,
@@ -41,6 +43,29 @@ from .granularity import (
 from .plan import candidate_theta, contingency_from_ids, ids_by_sort, subset_ids
 
 __all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce", "raw_granularity"]
+
+_MODES = ("incremental", "spark")
+_BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla")
+_ENGINES = ("auto", "host", "device")
+
+
+def _resolve_engine(engine: str, backend: str) -> str:
+    """Validate the engine knob and resolve ``auto``.
+
+    ``auto`` prefers the device-resident while_loop engine (core/engine.py)
+    and falls back to the host loop only where the device engine cannot run:
+    the interpret-mode Pallas backends (``pallas``/``fused``).
+    """
+    if engine not in _ENGINES:
+        raise ValueError(
+            f"unknown engine: {engine!r} (one of: {', '.join(_ENGINES)})")
+    if engine == "device" and backend not in DEVICE_BACKENDS:
+        raise ValueError(
+            f"engine='device' does not support backend={backend!r} "
+            f"(one of: {', '.join(DEVICE_BACKENDS)}); use engine='host'")
+    if engine == "auto":
+        return "device" if backend in DEVICE_BACKENDS else "host"
+    return engine
 
 
 def _next_pow2(v: int) -> int:
@@ -117,22 +142,13 @@ def _eval_chunk_spark(delta, n_bins, m, v_max):
     @jax.jit
     def run(hR1, hR2, cand_cols, x, d, w, active, n, pr_correction):
         def one(col):
-            t1 = column_terms_dyn(x, col, 0)
-            t2 = column_terms_dyn(x, col, 7919)
+            t1 = dyn_column_terms(x, col, 0)
+            t2 = dyn_column_terms(x, col, 7919)
             ids, _k = ids_by_sort([hR2 + t2, hR1 + t1], active)
             cont = contingency_from_ids(ids, d, w, active, n_bins=n_bins, m=m)
             return measures.evaluate(delta, cont, n)
 
         return jax.lax.map(one, cand_cols) + pr_correction
-
-    def column_terms_dyn(x, col, seed):
-        # dynamic-column version of granularity.column_terms
-        from .granularity import _column_seeds, _mix32  # noqa: internal reuse
-
-        seeds = jnp.asarray(_column_seeds(x.shape[1], seed))
-        cs = seeds[0, col]
-        mult = seeds[1, col]
-        return _mix32(x[:, col].astype(jnp.uint32) ^ cs) * mult
 
     return run
 
@@ -180,8 +196,8 @@ def _core_inner_thetas(gran: Granularity, delta: str, *, exact: bool, chunk: int
     @jax.jit
     def chunk_fn(cand_cols):
         def one(col):
-            t1 = _dyn_term(gran.x, col, 0)
-            t2 = _dyn_term(gran.x, col, 7919)
+            t1 = dyn_column_terms(gran.x, col, 0)
+            t2 = dyn_column_terms(gran.x, col, 7919)
             ids, _k = ids_by_sort([h2 - t2, h1 - t1], gran.valid)
             cont = contingency_from_ids(ids, gran.d, gran.w, gran.valid, n_bins=n_bins, m=gran.n_dec)
             return measures.evaluate(delta, cont, gran.n_total)
@@ -195,13 +211,6 @@ def _core_inner_thetas(gran: Granularity, delta: str, *, exact: bool, chunk: int
         vals = np.asarray(chunk_fn(jnp.asarray(padded)))
         out[s : s + len(cols)] = vals[: len(cols)]
     return out
-
-
-def _dyn_term(x, col, seed):
-    from .granularity import _column_seeds, _mix32  # noqa: internal reuse
-
-    seeds = jnp.asarray(_column_seeds(x.shape[1], seed))
-    return _mix32(x[:, col].astype(jnp.uint32) ^ seeds[0, col]) * seeds[1, col]
 
 
 # ---------------------------------------------------------------------------
@@ -227,9 +236,17 @@ def plar_reduce(
     shrink: bool = False,                # FSPA universe shrinking
     exact: bool = True,
     compute_core: bool = True,
+    engine: str = "auto",                # "device" while_loop | "host" legacy loop
 ) -> ReductionResult:
     """PLAR (Algorithm 2) on one process.  See module docstring for modes."""
     t0 = time.perf_counter()
+    if mode not in _MODES:
+        raise ValueError(
+            f"unknown mode: {mode!r} (one of: {', '.join(_MODES)})")
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown Θ backend: {backend!r} (one of: {', '.join(_BACKENDS)})")
+    engine = _resolve_engine(engine, backend)
     x = jnp.asarray(x, jnp.int32)
     d = jnp.asarray(d, jnp.int32)
     if n_dec is None:
@@ -274,42 +291,78 @@ def plar_reduce(
         core = [int(a) for a in range(A) if sig[a] > eps + tie_tol]
         n_evals += A
 
-    # --- greedy loop state ---
+    if engine == "device":
+        # Device-resident engine: core folding + greedy loop + stopping rule
+        # run as ONE lax.while_loop (core/engine.py) — a single dispatch, a
+        # single compile (n_bins = cap·v_max is static), and one device→host
+        # transfer at the end.
+        max_sel = int(max_features) if max_features is not None else A
+        runner = make_engine_run(
+            delta, mode, backend, A, cap, m, gran.v_max, float(tol),
+            float(tie_tol), bool(shrink), max_sel, int(mp_chunk))
+        reduct, theta_hist, iterations, ev, per_iter = run_engine(
+            runner, cap, A, gran.valid, gran.x, gran.d, gran.w, n,
+            theta_full, core)
+        return ReductionResult(
+            reduct=reduct,
+            core=core,
+            theta_full=theta_full,
+            theta_history=theta_hist,
+            iterations=iterations,
+            n_evaluations=n_evals + ev,
+            elapsed_s=time.perf_counter() - t0,
+            per_iteration_s=per_iter,
+        )
+
+    # --- greedy loop state (engine == "host": the legacy escape hatch) ---
     r_ids = jnp.zeros((cap,), jnp.int32)
     k = 1
     active = gran.valid
-    pr_correction = 0.0
+    # float32 accumulation, mirroring the device engine bit-for-bit (so the
+    # two engines' theta histories are byte-identical, asserted in tests)
+    pr_correction = np.float32(0.0)
     reduct: List[int] = []
     theta_hist: List[float] = []
     per_iter_s: List[float] = []
 
     v = gran.v_max
 
-    def bins_for(k_):
-        return _next_pow2(max(k_, 1)) * v
+    # Evaluation and advance both use the engine's static bin bound cap·V:
+    # one compile for the whole run (no power-of-two recompile ladder) and Θ
+    # summed over the same padded rows as engine="device" — zero rows add
+    # exactly 0 in f32, but reduction *grouping* depends on length, so equal
+    # lengths ⇒ equal bits (candidate thetas AND recorded histories).
+    adv = _make_advance(cap * v, v, m, delta)
+
+    # The stop threshold mirrors the device cond's f32 arithmetic exactly, so
+    # both engines run the same number of iterations even when theta_r lands
+    # within an ulp of it.
+    stop_thresh = measures.f32_threshold(theta_full, tol)
+
+    def _shrink_step(g_pure):
+        nonlocal pr_correction, active
+        if delta == "PR":
+            shed = jnp.sum(jnp.where(g_pure, gran.w, 0)).astype(jnp.float32)
+            pr_correction = pr_correction - np.float32(shed / jnp.float32(n))
+        active = active & ~g_pure
 
     # fold core attributes into the state
     for a in core:
-        n_bins = bins_for(k)
-        adv = _make_advance(n_bins, v, m, delta)
         r_ids, k_new, theta_r, g_pure = adv(r_ids, gran.x[:, a], gran.d, gran.w, active, n)
         k = int(k_new)
         reduct.append(a)
-        theta_hist.append(float(theta_r) + pr_correction)
+        theta_hist.append(float(np.float32(theta_r) + pr_correction))
         if shrink:
-            if delta == "PR":
-                pr_correction += float(-jnp.sum(jnp.where(g_pure, gran.w, 0)) / n)
-            active = active & ~g_pure
+            _shrink_step(g_pure)
 
     theta_r = theta_hist[-1] if theta_hist else float("inf")
 
     remaining = [a for a in range(A) if a not in reduct]
     iterations = 0
-    while remaining and theta_r > theta_full + tol:
+    while remaining and theta_r > stop_thresh:
         if max_features is not None and len(reduct) >= max_features:
             break
         it0 = time.perf_counter()
-        n_bins = bins_for(k)
         nc = min(mp_chunk, max(len(remaining), 1))
 
         thetas = np.full((len(remaining),), np.inf, np.float64)
@@ -331,7 +384,13 @@ def plar_reduce(
                 )
                 thetas[s : s + len(cols)] = vals[: len(cols)]
         else:
-            runner = _eval_chunk_incremental(delta, backend, n_bins, m, v)
+            # Device-capable backends evaluate at the engine's static bin
+            # bound so candidate thetas are bit-identical to engine="device";
+            # the host-only Pallas backends have no device twin to match and
+            # keep the cheaper bins_for(k) pow2 ladder.
+            eval_bins = (cap * v if backend in DEVICE_BACKENDS
+                         else _next_pow2(max(k, 1)) * v)
+            runner = _eval_chunk_incremental(delta, backend, eval_bins, m, v)
             for s in range(0, len(remaining), nc):
                 cols = np.asarray(remaining[s : s + nc], np.int32)
                 pad = nc - len(cols)
@@ -345,17 +404,14 @@ def plar_reduce(
         best = measures.argmin_with_ties(thetas, tie_tol)  # paper line 13: argmin Θ
         a_opt = remaining[best]
 
-        adv = _make_advance(bins_for(k), v, m, delta)
         r_ids, k_new, theta_active, g_pure = adv(r_ids, gran.x[:, a_opt], gran.d, gran.w, active, n)
         k = int(k_new)
-        theta_r = float(theta_active) + pr_correction
+        theta_r = float(np.float32(theta_active) + pr_correction)
         reduct.append(a_opt)
         remaining.remove(a_opt)
         theta_hist.append(theta_r)
         if shrink:
-            if delta == "PR":
-                pr_correction += float(-jnp.sum(jnp.where(g_pure, gran.w, 0)) / n)
-            active = active & ~g_pure
+            _shrink_step(g_pure)
         iterations += 1
         per_iter_s.append(time.perf_counter() - it0)
 

@@ -21,6 +21,13 @@ def main():
     ap.add_argument("--max-attrs", type=int, default=64)
     ap.add_argument("--max-features", type=int, default=None)
     ap.add_argument("--mode", default="incremental", choices=["incremental", "spark"])
+    ap.add_argument("--backend", default="segment",
+                    choices=["segment", "onehot", "pallas", "fused", "fused_xla"],
+                    help="Θ evaluation backend (fused = PR-1 Pallas kernel)")
+    ap.add_argument("--engine", default="auto", choices=["auto", "host", "device"],
+                    help="greedy loop: device-resident while_loop or legacy host loop")
+    ap.add_argument("--shrink", action="store_true",
+                    help="FSPA universe shrinking (drop pure classes)")
     ap.add_argument("--mp-chunk", type=int, default=64)
     ap.add_argument("--no-grc", action="store_true")
     ap.add_argument("--distributed", action="store_true")
@@ -36,6 +43,17 @@ def main():
                                 max_attrs=args.max_attrs).table()
 
     if args.distributed:
+        # the mesh driver has no mode/backend/shrink knobs — refuse rather
+        # than silently ignoring them
+        dropped = [name for name, off_default in [
+            ("--mode", args.mode != "incremental"),
+            ("--backend", args.backend != "segment"),
+            ("--shrink", args.shrink),
+            ("--mp-chunk", args.mp_chunk != 64),
+        ] if off_default]
+        if dropped:
+            ap.error(f"{', '.join(dropped)} not supported with --distributed")
+
         from repro.core.distributed import plar_reduce_distributed
         from repro.distributed.api import make_mesh
 
@@ -43,11 +61,14 @@ def main():
         mesh = make_mesh(shape, ("data", "model"))
         r = plar_reduce_distributed(x, d, mesh, delta=args.delta,
                                     max_features=args.max_features,
-                                    collective=args.collective)
+                                    collective=args.collective,
+                                    engine=args.engine)
     else:
         from repro.core import plar_reduce
 
         r = plar_reduce(x, d, delta=args.delta, mode=args.mode,
+                        backend=args.backend, engine=args.engine,
+                        shrink=args.shrink,
                         mp_chunk=args.mp_chunk, grc_init=not args.no_grc,
                         max_features=args.max_features)
 

@@ -7,6 +7,8 @@ exit code.  Covered:
 * distributed PLAR == serial PLAR == oracle, on ('data','model') and
   ('pod','data','model') meshes, all three collective schedules
   (all_reduce / reduce_scatter / fused — DESIGN.md §3.2, §5.2);
+* the device-resident shard_map(while_loop) engine == the legacy host
+  driver on a real multi-device mesh (DESIGN.md §3.5);
 * int8 compressed psum with error feedback tracks the exact mean;
 * GPipe pipeline == sequential stack, forward and gradient;
 * elastic checkpoint restore across mesh shapes (4 devices → 8 devices).
@@ -47,6 +49,36 @@ for delta in ["PR", "SCE", "LCE", "CCE"]:
     for coll in ["all_reduce", "reduce_scatter", "fused"]:
         got = plar_reduce_distributed(x, d, mesh, delta=delta, collective=coll).reduct
         assert got == want, (delta, coll, got, want)
+""")
+
+
+def test_distributed_engine_device_matches_host_loop():
+    """shard_map(while_loop) engine == legacy host driver == oracle, on a
+    real multi-device mesh, both device-capable collective schedules."""
+    _run("""
+import numpy as np, jax
+from repro.core.distributed import plar_reduce_distributed
+from repro.core.oracle import reduct_oracle
+from repro.distributed.api import make_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(5)
+x = rng.integers(0, 3, size=(320, 9)).astype(np.int32)
+for j in range(1, 9):
+    if rng.random() < 0.4:
+        x[:, j] = x[:, rng.integers(0, j)]
+d = rng.integers(0, 2, size=(320,)).astype(np.int32)
+for delta in ["PR", "SCE"]:
+    want = reduct_oracle(delta, x, d)
+    for coll in ["all_reduce", "reduce_scatter"]:
+        dev = plar_reduce_distributed(x, d, mesh, delta=delta, collective=coll,
+                                      engine="device")
+        host = plar_reduce_distributed(x, d, mesh, delta=delta, collective=coll,
+                                       engine="host")
+        assert dev.reduct == host.reduct == want, (delta, coll, dev.reduct)
+        assert dev.core == host.core
+        np.testing.assert_allclose(dev.theta_history, host.theta_history,
+                                   rtol=1e-6, atol=1e-7)
 """)
 
 
