@@ -1,0 +1,121 @@
+"""Streaming GrC ingestion benchmark: build throughput + peak RSS.
+
+The paper's premise (PLAR §3.3, Fig. 9) is that the granularity
+representation is small enough to cache — but *getting there* used to
+require the uncompressed ``(n_rows, n_attrs)`` table resident on the host.
+This section measures what the streaming build (DESIGN.md §3.6) buys:
+
+* ``ingest_stream_vs_monolithic`` — same table, both ingestion paths, in
+  *separate subprocesses* so each run's ``ru_maxrss`` is a clean per-path
+  peak (RSS high-water marks are monotone within a process, so in-process
+  before/after deltas would be meaningless).  Streaming peak memory is
+  O(chunk + granularity capacity); monolithic is O(n_rows · n_attrs) plus
+  the sort's key copies.
+* ``ingest_paper_scale`` — the Table-5 flagship kdd99 at its full 5M×41
+  shape, streaming only (the whole point: the monolithic path at this shape
+  is exactly what we no longer need).  Granule counts are asserted equal
+  between paths where both run.
+
+Snapshot with ``python -m benchmarks.run --preset ingest`` →
+``benchmarks/BENCH_ingest.json`` (CI runs the preset as a smoke step; the
+paper-scale section is included via ``python -m benchmarks.run
+ingest_paper_scale --tag ingest`` when refreshing the acceptance evidence).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+_CHILD = r"""
+import dataclasses, json, resource, sys, time
+mode, name, n_rows, chunk_rows = sys.argv[1], sys.argv[2], int(sys.argv[3]), int(sys.argv[4])
+import jax.numpy as jnp
+from repro.core import build_granularity, build_granularity_streaming
+from repro.data import paper_dataset
+
+t = paper_dataset(name)
+if n_rows:
+    t = dataclasses.replace(t, n_rows=n_rows)
+t0 = time.perf_counter()
+if mode == "monolithic":
+    x, d = t.table()
+    g = build_granularity(jnp.asarray(x), jnp.asarray(d), n_dec=t.n_dec, v_max=t.v_max)
+else:
+    g = build_granularity_streaming(t.chunks(chunk_rows), n_dec=t.n_dec, v_max=t.v_max)
+out = {
+    "granules": int(g.num),
+    "elapsed_s": round(time.perf_counter() - t0, 2),
+    # linux ru_maxrss is KiB
+    "peak_rss_mb": round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+}
+print(json.dumps(out))
+"""
+
+
+def _ingest(mode: str, name: str, n_rows: int, chunk_rows: int) -> Dict:
+    """Run one ingestion in a fresh python; return its self-reported stats."""
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env = {**os.environ, "PYTHONPATH": src}
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD, mode, name, str(n_rows), str(chunk_rows)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"ingest child failed:\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _row(name: str, mode: str, n_rows: int, chunk_rows: int, stats: Dict) -> Dict:
+    return {
+        "dataset": name,
+        "rows": n_rows,
+        "mode": mode,
+        "chunk_rows": chunk_rows if mode == "streaming" else "-",
+        "granules": stats["granules"],
+        "elapsed_s": stats["elapsed_s"],
+        "peak_rss_mb": stats["peak_rss_mb"],
+        "krows_per_s": round(n_rows / max(stats["elapsed_s"], 1e-9) / 1e3, 1),
+    }
+
+
+def ingest_stream_vs_monolithic() -> List[Dict]:
+    """Both paths on a kdd99-shaped table capped to a CI-friendly row count."""
+    rows: List[Dict] = []
+    shapes = [("kdd99", 1_000_000, 65536), ("shuttle", 58_000, 8192)]
+    for name, n_rows, chunk_rows in shapes:
+        mono = _ingest("monolithic", name, n_rows, chunk_rows)
+        stream = _ingest("streaming", name, n_rows, chunk_rows)
+        assert mono["granules"] == stream["granules"], (name, mono, stream)
+        rows.append(_row(name, "monolithic", n_rows, chunk_rows, mono))
+        rows.append(_row(name, "streaming", n_rows, chunk_rows, stream))
+        rows.append({
+            "dataset": name, "rows": n_rows, "mode": "rss_ratio",
+            "chunk_rows": "-", "granules": "-", "elapsed_s": "-",
+            "peak_rss_mb": round(mono["peak_rss_mb"] / stream["peak_rss_mb"], 2),
+            "krows_per_s": "-",
+        })
+    return rows
+
+
+def ingest_paper_scale() -> List[Dict]:
+    """kdd99 at the full Table-5 shape (5M×41), streaming only."""
+    name, chunk_rows = "kdd99", 65536
+    from repro.data import paper_dataset
+
+    n_rows = paper_dataset(name).n_rows
+    stream = _ingest("streaming", name, 0, chunk_rows)
+    return [_row(name, "streaming", n_rows, chunk_rows, stream)]
+
+
+ALL_INGEST_BENCHES = {
+    "ingest_stream_vs_monolithic": ingest_stream_vs_monolithic,
+}
+
+# Addressable by explicit name only — a ~5-8 min 5M-row build does not
+# belong in the no-arg run-everything path (run.py merges these into the
+# job table only when a wanted section names them).
+EXPLICIT_BENCHES = {
+    "ingest_paper_scale": ingest_paper_scale,
+}

@@ -31,15 +31,23 @@ def _print_rows(name: str, rows) -> None:
 PRESETS = {
     "engine": ["engine_host_vs_device"],
     "kernels": ["contingency_backends", "fused_theta_vs_unfused"],
+    "ingest": ["ingest_stream_vs_monolithic"],
 }
 
 
 def main() -> None:
     from .engine_bench import ALL_ENGINE_BENCHES
+    from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
 
-    argv = sys.argv[1:]
+    # accept both "--flag VALUE" and "--flag=VALUE"
+    argv = []
+    for a in sys.argv[1:]:
+        if a.startswith("--preset=") or a.startswith("--tag="):
+            argv.extend(a.split("=", 1))
+        else:
+            argv.append(a)
     tag = None
     if "--tag" in argv:
         i = argv.index("--tag")
@@ -58,9 +66,16 @@ def main() -> None:
         argv = argv[:i] + [s for s in PRESETS[preset] if s not in argv] + argv[i + 2:]
         tag = tag or preset
     wanted = argv or None
-    jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES}
+    jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
+            **ALL_INGEST_BENCHES}
+    # long-running sections run only when named, never via the no-arg path
+    selectable = {**jobs, **EXPLICIT_BENCHES}
     if wanted:
-        jobs = {k: v for k, v in jobs.items() if k in wanted}
+        unknown = [s for s in wanted if s not in selectable]
+        if unknown:
+            sys.exit(f"unknown section(s): {', '.join(unknown)}\n"
+                     f"available: {', '.join(sorted(selectable))}")
+        jobs = {k: v for k, v in selectable.items() if k in wanted}
 
     results = {}
     for name, fn in jobs.items():
@@ -76,9 +91,26 @@ def main() -> None:
 
     if tag is not None:
         snap = f"benchmarks/BENCH_{tag}.json"
+        # merge by section: partial runs refresh what they ran without
+        # destroying a snapshot's other sections (e.g. BENCH_ingest.json
+        # holds the CI-smoke section AND the paper-scale evidence); each
+        # section keeps its own timestamp so carried-over evidence is
+        # distinguishable from freshly regenerated rows
+        sections, section_times = {}, {}
+        try:
+            with open(snap) as f:
+                prev = json.load(f)
+            sections = prev.get("sections", {})
+            section_times = prev.get("section_times", {})
+        except (OSError, json.JSONDecodeError):
+            pass
+        now = int(time.time())
+        sections.update(results)
+        section_times.update({name: now for name in results})
         with open(snap, "w") as f:
-            json.dump({"tag": tag, "unix_time": int(time.time()),
-                       "sections": results}, f, indent=2)
+            json.dump({"tag": tag, "unix_time": now,
+                       "section_times": section_times,
+                       "sections": sections}, f, indent=2)
         print(f"written: {snap}")
 
 

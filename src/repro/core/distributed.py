@@ -32,7 +32,10 @@ Three collective schedules for the contingency merge (the §Perf knob):
 Correctness notes:
 * Per-shard granularity tables may hold duplicate keys across shards — the
   contingency sum is key-additive, so dedup is an optional memory
-  optimization (``dedup_granules``), never a correctness requirement.
+  optimization (``dedup_granules``), never a correctness requirement.  The
+  same property licenses *streaming* ingestion (``source=``): each shard
+  folds its slice of every chunk through the granularity monoid merge
+  (DESIGN.md §3.6) instead of staging the sharded full table.
 * Id compaction uses the presence-bitmap/psum construction whose
   shard-consistency is proven by ``test_compact_ids_commute_with_merge``.
 * The attribute core (one-time, paper lines 3–8) is computed on gathered
@@ -64,9 +67,21 @@ from .engine import (
     merge_candidate_cont,
     run_engine,
 )
-from .granularity import build_granularity
+from .granularity import (
+    Granularity,
+    build_granularity,
+    fold_chunk,
+    next_pow2,
+    with_capacity,
+)
 from .plan import contingency_from_ids
-from .reduction import ReductionResult, _core_inner_thetas, _next_pow2
+from .reduction import (
+    ReductionResult,
+    _check_source_args,
+    _core_inner_thetas,
+    _materialize,
+    _next_pow2,
+)
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -261,6 +276,79 @@ def shard_decision_table(x: np.ndarray, d: np.ndarray, mesh: Mesh):
     )
 
 
+def _shard_granularities_to_mesh(shard_grans, mesh: Mesh):
+    """Place per-shard granule tables (equal capacities) row-sharded on the mesh."""
+    daxes = _data_axes(mesh)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    gx = jax.device_put(np.concatenate([np.asarray(g.x) for g in shard_grans]),
+                        sh(daxes, None))
+    gd = jax.device_put(np.concatenate([np.asarray(g.d) for g in shard_grans]),
+                        sh(daxes))
+    gw = jax.device_put(np.concatenate([np.asarray(g.w) for g in shard_grans]),
+                        sh(daxes))
+    gv = jax.device_put(np.concatenate([np.asarray(g.valid) for g in shard_grans]),
+                        sh(daxes))
+    return gx, gd, gw, gv
+
+
+def _granularity_from_source(source, mesh: Mesh, *, n_dec: int, v_max: int,
+                             chunk_rows: int):
+    """Distributed GrC init without the sharded full table resident.
+
+    Each data shard folds its slice of every chunk through the streaming
+    monoid merge, so peak host memory is O(chunk + Σ per-shard granularity
+    capacity) instead of the full ``(n_rows, n_attrs)`` array that
+    ``shard_decision_table`` + ``_grc_build_step`` stage.  Chunks iterate
+    on the *outside* — each is materialized exactly once and sliced per
+    shard (the ``TokenStream.shard`` partition), not re-generated per shard
+    (for a real out-of-core reader that would multiply IO by the shard
+    count).  Cross-shard duplicate keys are allowed — the contingency sum
+    is key-additive (module docstring) — so shards granulate independently,
+    exactly like the per-partition combiner of a Spark reduceByKey.
+    """
+    nd = _n_data_shards(mesh)
+    accs = [None] * nd
+    for i in range(source.n_chunks(chunk_rows)):
+        xc, dc = source.chunk(i, chunk_rows)
+        n = xc.shape[0]
+        for s in range(nd):
+            lo, hi = s * n // nd, (s + 1) * n // nd
+            accs[s] = fold_chunk(accs[s], xc[lo:hi], dc[lo:hi],
+                                 n_dec=n_dec, v_max=v_max)
+    if any(g is None for g in accs):
+        raise ValueError("source yielded no rows for at least one data shard")
+    cap_ps = max(next_pow2(max(int(g.num), 16)) for g in accs)
+    accs = [with_capacity(g, cap_ps) for g in accs]
+    gx, gd, gw, gv = _shard_granularities_to_mesh(accs, mesh)
+    n_total = sum(int(g.n_total) for g in accs)
+    return gx, gd, gw, gv, n_total
+
+
+def _granularity_to_mesh(gran: Granularity, mesh: Mesh):
+    """Split a prebuilt (host) granularity contiguously over the data shards.
+
+    Live granules are distinct keys, so any row partition of them is a valid
+    per-shard granularity table; capacities pad to a common power of two.
+    """
+    nd = _n_data_shards(mesh)
+    live = int(gran.num)
+    cap_ps = next_pow2(max(-(-max(live, 1) // nd), 16))
+    x, d = np.asarray(gran.x)[:live], np.asarray(gran.d)[:live]
+    w, v = np.asarray(gran.w)[:live], np.asarray(gran.valid)[:live]
+    shard_grans = []
+    for s in range(nd):
+        lo, hi = s * live // nd, (s + 1) * live // nd
+        g = Granularity(
+            x=jnp.asarray(x[lo:hi]), d=jnp.asarray(d[lo:hi]),
+            w=jnp.asarray(w[lo:hi]), valid=jnp.asarray(v[lo:hi]),
+            num=jnp.int32(hi - lo), n_total=jnp.int32(int(w[lo:hi].sum())),
+            n_attrs=gran.n_attrs, n_dec=gran.n_dec, v_max=gran.v_max,
+        )
+        shard_grans.append(with_capacity(g, cap_ps))
+    gx, gd, gw, gv = _shard_granularities_to_mesh(shard_grans, mesh)
+    return gx, gd, gw, gv, int(gran.n_total)
+
+
 @lru_cache(maxsize=None)
 def _grc_build_step(mesh: Mesh, n_dec: int, v_max: int, capacity: int):
     """Per-shard GrC initialization (paper lines 1–2).  No cross-shard dedup:
@@ -354,10 +442,12 @@ def _regroup_by_class(gx, gd, gw, gvalid, r_ids, mesh):
 
 
 def plar_reduce_distributed(
-    x,
-    d,
-    mesh: Mesh,
+    x=None,
+    d=None,
+    mesh: Optional[Mesh] = None,
     *,
+    source=None,                        # Granularity | GranuleSource (alt. to x, d)
+    chunk_rows: int = 65536,            # streaming-ingestion chunk size
     delta: str = "PR",
     n_dec: Optional[int] = None,
     v_max: Optional[int] = None,
@@ -386,28 +476,52 @@ def plar_reduce_distributed(
             "use engine='host'")
     if engine == "auto":
         engine = "host" if collective == "fused" else "device"
-    x = np.asarray(x, np.int32)
-    d = np.asarray(d, np.int32)
-    if n_dec is None:
-        n_dec = int(d.max()) + 1
-    if v_max is None:
-        v_max = int(x.max()) + 1
-    n_rows, A = x.shape
+    if mesh is None:
+        raise ValueError("mesh is required")
+    _check_source_args(x, d, source)
     nd = _n_data_shards(mesh)
     nm = _n_model_shards(mesh)
 
+    if source is not None:
+        # declared source metadata is authoritative on every ingestion path
+        # (never re-inferred from whichever classes/values happened to
+        # realize) — both Granularity and GranuleSource carry these fields
+        n_dec = source.n_dec if n_dec is None else n_dec
+        v_max = source.v_max if v_max is None else v_max
+
+    if source is not None and not isinstance(source, Granularity) and not grc_init:
+        # HAR cost model (every raw row a granule) has nothing to stream
+        # into — materialize, same thin adapter as resolve_granularity.
+        x, d = _materialize(source, chunk_rows)
+        source = None
+
     # --- GrC initialization (distributed, cached in device memory) ---
-    xs, ds, vs = shard_decision_table(x, d, mesh)
-    cap_per_shard = xs.shape[0] // nd
-    if grc_init:
-        build = _grc_build_step(mesh, n_dec, v_max, cap_per_shard)
-        gx, gd, gw, gvalid, g_num, n_total = build(xs, ds, vs)
+    if isinstance(source, Granularity):
+        A = source.n_attrs
+        gx, gd, gw, gvalid, n_rows = _granularity_to_mesh(source, mesh)
+    elif source is not None:
+        A, n_rows = source.n_attrs, source.n_rows
+        gx, gd, gw, gvalid, _ = _granularity_from_source(
+            source, mesh, n_dec=n_dec, v_max=v_max, chunk_rows=chunk_rows)
     else:
-        gx, gd = xs, ds
-        gw = jax.device_put(
-            np.ones((xs.shape[0],), np.int32), NamedSharding(mesh, P(_data_axes(mesh))))
-        gvalid = vs
-        n_total = jnp.int32(n_rows)
+        x = np.asarray(x, np.int32)
+        d = np.asarray(d, np.int32)
+        if n_dec is None:
+            n_dec = int(d.max()) + 1
+        if v_max is None:
+            v_max = int(x.max()) + 1
+        n_rows, A = x.shape
+        xs, ds, vs = shard_decision_table(x, d, mesh)
+        cap_per_shard = xs.shape[0] // nd
+        if grc_init:
+            build = _grc_build_step(mesh, n_dec, v_max, cap_per_shard)
+            gx, gd, gw, gvalid, _g_num, _n_total = build(xs, ds, vs)
+        else:
+            gx, gd = xs, ds
+            gw = jax.device_put(
+                np.ones((xs.shape[0],), np.int32),
+                NamedSharding(mesh, P(_data_axes(mesh))))
+            gvalid = vs
     n = jnp.float32(n_rows)
 
     cap = gx.shape[0]
@@ -419,7 +533,6 @@ def plar_reduce_distributed(
     gd_h = np.asarray(gd)
     gw_h = np.asarray(gw)
     gv_h = np.asarray(gvalid)
-    from .granularity import Granularity
     gran_h = Granularity(
         x=jnp.asarray(gx_h), d=jnp.asarray(gd_h), w=jnp.asarray(gw_h),
         valid=jnp.asarray(gv_h), num=jnp.int32(int(gv_h.sum())),

@@ -31,6 +31,11 @@ import numpy as np
 __all__ = [
     "Granularity",
     "build_granularity",
+    "build_granularity_streaming",
+    "fold_chunk",
+    "merge_granularity",
+    "with_capacity",
+    "next_pow2",
     "column_terms",
     "dyn_column_terms",
     "row_fingerprints",
@@ -208,10 +213,15 @@ def build_granularity(
     ids = jnp.clip(ids, 0, cap - 1)
     num = b.sum().astype(jnp.int32)
 
-    w_g = jax.ops.segment_sum(w_s, ids, num_segments=cap)
+    # Invalid (padding) rows scatter out of bounds → dropped, never clipped
+    # into the last live segment where their zero rows would overwrite its
+    # representative (they sort after every valid row, so they'd all land
+    # on id num-1 otherwise).
+    ids_w = jnp.where(valid_s, ids, cap)
+    w_g = jax.ops.segment_sum(w_s, ids_w, num_segments=cap)
     # Representative rows: every row in a segment shares the key, any write wins.
-    x_g = jnp.zeros((cap, n_attrs), x.dtype).at[ids].set(jnp.where(valid_s[:, None], x_s, 0))
-    d_g = jnp.zeros((cap,), d.dtype).at[ids].set(jnp.where(valid_s, d_s, 0))
+    x_g = jnp.zeros((cap, n_attrs), x.dtype).at[ids_w].set(x_s)
+    d_g = jnp.zeros((cap,), d.dtype).at[ids_w].set(d_s)
     valid_g = jnp.arange(cap) < num
 
     return Granularity(
@@ -225,6 +235,140 @@ def build_granularity(
         n_dec=n_dec,
         v_max=v_max,
     )
+
+
+def next_pow2(v: int) -> int:
+    """Smallest power of two ≥ v (1 for v ≤ 1)."""
+    return 1 << max(0, (int(v) - 1)).bit_length()
+
+
+def with_capacity(gran: Granularity, capacity: int) -> Granularity:
+    """Re-pad a *front-packed* granularity (live slots first, the layout
+    :func:`build_granularity` emits) to a new static capacity.
+
+    Shrinking below the live count would silently drop granules, so it
+    raises; growing appends zero-weight padding.  One host sync on ``num``
+    when shrinking — the Spark analogue is the driver's ``count()`` action.
+    """
+    cap = gran.capacity
+    if capacity == cap:
+        return gran
+    if capacity < cap:
+        if int(gran.num) > capacity:
+            raise ValueError(
+                f"capacity {capacity} < live granule count {int(gran.num)}")
+        if int(gran.valid[:capacity].sum()) != int(gran.num):
+            raise ValueError(
+                "granularity is not front-packed: live slots extend past the "
+                f"requested capacity {capacity}")
+        x = gran.x[:capacity]
+        d = gran.d[:capacity]
+        w = gran.w[:capacity]
+        valid = gran.valid[:capacity]
+    else:
+        pad = capacity - cap
+        x = jnp.concatenate([gran.x, jnp.zeros((pad, gran.n_attrs), gran.x.dtype)])
+        d = jnp.concatenate([gran.d, jnp.zeros((pad,), gran.d.dtype)])
+        w = jnp.concatenate([gran.w, jnp.zeros((pad,), gran.w.dtype)])
+        valid = jnp.concatenate([gran.valid, jnp.zeros((pad,), bool)])
+    return Granularity(
+        x=x, d=d, w=w, valid=valid, num=gran.num, n_total=gran.n_total,
+        n_attrs=gran.n_attrs, n_dec=gran.n_dec, v_max=gran.v_max,
+    )
+
+
+def merge_granularity(a: Granularity, b: Granularity, *, exact: bool = True,
+                      seed: int = 0, capacity: Optional[int] = None) -> Granularity:
+    """Monoid merge: ``G^(A∪B) = G^(A) ⊕ G^(B)`` — the chunked reduceByKey.
+
+    Concatenates the two padded tables and re-granulates with the input
+    weights (concat → sort → adjacent-compare → ``segment_sum``), so
+    duplicate keys across the operands merge weight-additively.  The merge is
+    associative and commutative up to padding: the output's live prefix is
+    the *globally sorted* distinct-key table, independent of operand order
+    or how rows were split between operands.
+
+    Capacity-doubling policy: the result capacity starts at
+    ``next_pow2(max(capacity or 0, a.capacity, b.capacity))`` and doubles
+    (via ``next_pow2`` of the true distinct count) whenever the live keys
+    overflow it.  The overflow check is one host sync of ``num`` — ``num``
+    counts sort boundaries *before* the scatter clips, so a clipped build is
+    always detected and rebuilt; capacities stay powers of two so the
+    streaming fold compiles O(log G) variants, not one per merge.
+    """
+    if (a.n_attrs, a.n_dec, a.v_max) != (b.n_attrs, b.n_dec, b.v_max):
+        raise ValueError(
+            "merge_granularity operands disagree on static metadata: "
+            f"{(a.n_attrs, a.n_dec, a.v_max)} vs {(b.n_attrs, b.n_dec, b.v_max)}")
+    x = jnp.concatenate([a.x, b.x])
+    d = jnp.concatenate([a.d, b.d])
+    w = jnp.concatenate([a.w, b.w])
+    valid = jnp.concatenate([a.valid, b.valid])
+    cap = next_pow2(max(capacity or 1, a.capacity, b.capacity))
+    while True:
+        g = build_granularity(
+            x, d, n_dec=a.n_dec, v_max=a.v_max, w=w, valid=valid,
+            exact=exact, seed=seed, capacity=cap,
+        )
+        num = int(g.num)
+        if num <= cap:
+            return g
+        cap = next_pow2(num)
+
+
+def build_granularity_streaming(
+    chunks,
+    *,
+    n_dec: int,
+    v_max: int,
+    exact: bool = True,
+    seed: int = 0,
+) -> Granularity:
+    """GrC initialization without the whole table: fold :func:`merge_granularity`
+    over an iterable of ``(x, d)`` row chunks.
+
+    Each chunk is granulated at its own ``next_pow2`` capacity and merged
+    into the accumulator, so peak memory is O(chunk + accumulator capacity)
+    — the decision table never exists whole.  Because the merge is a monoid
+    and the final fold step re-sorts the full distinct-key set, the live
+    prefix of the result is *element-wise identical* to a monolithic
+    :func:`build_granularity` over the concatenated rows (only the padded
+    capacity may differ); `tests/test_streaming.py` asserts this per
+    chunk size.
+    """
+    acc: Optional[Granularity] = None
+    for xc, dc in chunks:
+        acc = fold_chunk(acc, xc, dc, n_dec=n_dec, v_max=v_max, exact=exact,
+                         seed=seed)
+    if acc is None:
+        raise ValueError("build_granularity_streaming: no non-empty chunks")
+    return acc
+
+
+def fold_chunk(acc: Optional[Granularity], xc, dc, *, n_dec: int, v_max: int,
+               exact: bool = True, seed: int = 0) -> Optional[Granularity]:
+    """One step of the streaming fold: granulate a row chunk and merge it.
+
+    The single home of the capacity/shrink policy, shared by the
+    single-process and per-data-shard (``distributed``) folds: both operands
+    shrink to their live counts before the merge — on redundant tables a
+    chunk's granularity is far smaller than the chunk, and the merge sort
+    should pay for live keys, not padding.  The host syncs are the per-merge
+    count() the policy already requires.
+    """
+    xc = jnp.asarray(xc, jnp.int32)
+    dc = jnp.asarray(dc, jnp.int32)
+    if xc.shape[0] == 0:
+        return acc
+    g = build_granularity(
+        xc, dc, n_dec=n_dec, v_max=v_max, exact=exact, seed=seed,
+        capacity=next_pow2(xc.shape[0]),
+    )
+    g = with_capacity(g, next_pow2(max(int(g.num), 1)))
+    if acc is None:
+        return g
+    acc = merge_granularity(acc, g, exact=exact, seed=seed)
+    return with_capacity(acc, next_pow2(max(int(acc.num), 1)))
 
 
 def regranulate(gran: Granularity, cols: jnp.ndarray, *, exact: bool = True, seed: int = 0) -> Granularity:

@@ -34,15 +34,19 @@ from .engine import DEVICE_BACKENDS, make_engine_run, run_engine
 from .granularity import (
     Granularity,
     build_granularity,
+    build_granularity_streaming,
     column_terms,
     dyn_column_terms,
     compact_ids,
+    next_pow2,
     pack_ids,
     row_fingerprints,
+    with_capacity,
 )
 from .plan import candidate_theta, contingency_from_ids, ids_by_sort, subset_ids
 
-__all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce", "raw_granularity"]
+__all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce",
+           "raw_granularity", "resolve_granularity"]
 
 _MODES = ("incremental", "spark")
 _BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla")
@@ -68,8 +72,9 @@ def _resolve_engine(engine: str, backend: str) -> str:
     return engine
 
 
-def _next_pow2(v: int) -> int:
-    return 1 << max(0, (int(v) - 1)).bit_length()
+# kept as an alias: the canonical definition moved next to the capacity
+# policy it governs (granularity.merge_granularity)
+_next_pow2 = next_pow2
 
 
 @dataclasses.dataclass
@@ -218,10 +223,106 @@ def _core_inner_thetas(gran: Granularity, delta: str, *, exact: bool, chunk: int
 # ---------------------------------------------------------------------------
 
 
-def plar_reduce(
-    x,
-    d,
+def _shrink_capacity(gran: Granularity) -> Granularity:
+    """Shrink the static capacity to the live granule count (next pow2):
+    the paper's space win |U/A| ≪ |U| only pays if downstream shapes shrink
+    with it.  One host sync — the Spark analogue is the driver's count()
+    action after caching the RDD.  Streaming and monolithic builds land on
+    the *same* capacity here (same live count), which is what makes their
+    reducts and Θ histories byte-identical (engine n_bins = cap·v_max)."""
+    cap2 = next_pow2(max(int(gran.num), 16))
+    return with_capacity(gran, cap2) if cap2 != gran.capacity else gran
+
+
+def _iter_chunks(source, chunk_rows: int):
+    """Chunk iterator over the *protocol* surface (``n_chunks``/``chunk``)
+    only — a conforming GranuleSource need not provide the ``chunks``
+    convenience wrapper TabularStream has."""
+    return (source.chunk(i, chunk_rows) for i in range(source.n_chunks(chunk_rows)))
+
+
+def _materialize(source, chunk_rows: int):
+    """Concatenate a GranuleSource's chunks into full (x, d) host arrays."""
+    xs, ds = zip(*_iter_chunks(source, chunk_rows))
+    return np.concatenate(xs), np.concatenate(ds)
+
+
+def _check_source_args(x, d, source):
+    """Shared (x, d)/source exclusivity + source-type validation — one copy
+    for both drivers, so the error surface cannot drift between them."""
+    if source is not None and (x is not None or d is not None):
+        raise ValueError("pass either (x, d) arrays or source=, not both")
+    if source is None and (x is None or d is None):
+        raise ValueError("pass (x, d) arrays or source=")
+    if (source is not None and not isinstance(source, Granularity)
+            and not hasattr(source, "chunk")):
+        raise TypeError(
+            f"source must be a Granularity or GranuleSource, got {type(source)!r}")
+
+
+def resolve_granularity(
+    x=None,
+    d=None,
     *,
+    source=None,
+    grc_init: bool = True,
+    n_dec: Optional[int] = None,
+    v_max: Optional[int] = None,
+    exact: bool = True,
+    chunk_rows: int = 65536,
+) -> Granularity:
+    """The one ingestion seam: everything the drivers accept → ``Granularity``.
+
+    * a prebuilt :class:`Granularity` (``source=``) — used as-is (capacity
+      re-packed when ``grc_init``, verbatim otherwise);
+    * a :class:`~repro.data.GranuleSource` (``source=``, anything with a
+      ``chunk`` method) — streamed chunkwise through
+      :func:`build_granularity_streaming`, so the decision table never
+      exists whole.  ``grc_init=False`` (the HAR/FSPA cost model: every raw
+      row its own granule) has no compressed representation to stream into,
+      so the chunks are materialized — unrunnable at paper scale *by
+      design*; that cost gap is the paper's Fig. 9.
+    * raw ``(x, d)`` arrays — the legacy path, now a thin adapter over the
+      same build.
+
+    Metadata: a source's declared ``n_dec``/``v_max`` are authoritative; the
+    array adapter *infers* them from realized data when not given.  Byte
+    parity between the two paths therefore requires passing the declared
+    values to the array call too (a class that happens never to materialize
+    would otherwise change the inferred ``m``/``n_bins``).
+    """
+    _check_source_args(x, d, source)
+
+    if isinstance(source, Granularity):
+        return _shrink_capacity(source) if grc_init else source
+
+    if source is not None:
+        n_dec = source.n_dec if n_dec is None else n_dec
+        v_max = source.v_max if v_max is None else v_max
+        if grc_init:
+            return _shrink_capacity(build_granularity_streaming(
+                _iter_chunks(source, chunk_rows), n_dec=n_dec, v_max=v_max,
+                exact=exact))
+        x, d = _materialize(source, chunk_rows)
+
+    x = jnp.asarray(x, jnp.int32)
+    d = jnp.asarray(d, jnp.int32)
+    if n_dec is None:
+        n_dec = int(jnp.max(d)) + 1
+    if v_max is None:
+        v_max = int(jnp.max(x)) + 1
+    if not grc_init:
+        return raw_granularity(x, d, n_dec=n_dec, v_max=v_max)
+    return _shrink_capacity(
+        build_granularity(x, d, n_dec=n_dec, v_max=v_max, exact=exact))
+
+
+def plar_reduce(
+    x=None,
+    d=None,
+    *,
+    source=None,                         # Granularity | GranuleSource (alt. to x, d)
+    chunk_rows: int = 65536,             # streaming-ingestion chunk size
     delta: str = "PR",
     n_dec: Optional[int] = None,
     v_max: Optional[int] = None,
@@ -247,29 +348,9 @@ def plar_reduce(
         raise ValueError(
             f"unknown Θ backend: {backend!r} (one of: {', '.join(_BACKENDS)})")
     engine = _resolve_engine(engine, backend)
-    x = jnp.asarray(x, jnp.int32)
-    d = jnp.asarray(d, jnp.int32)
-    if n_dec is None:
-        n_dec = int(jnp.max(d)) + 1
-    if v_max is None:
-        v_max = int(jnp.max(x)) + 1
-
-    if grc_init:
-        gran = build_granularity(x, d, n_dec=n_dec, v_max=v_max, exact=exact)
-        # Shrink the static capacity to the live granule count (next pow2):
-        # the paper's space win |U/A| ≪ |U| only pays if downstream shapes
-        # shrink with it.  One host sync at init — the Spark analogue is the
-        # driver's count() action after caching the RDD.
-        num = int(gran.num)
-        cap2 = _next_pow2(max(num, 16))
-        if cap2 < gran.capacity:
-            gran = Granularity(
-                x=gran.x[:cap2], d=gran.d[:cap2], w=gran.w[:cap2],
-                valid=gran.valid[:cap2], num=gran.num, n_total=gran.n_total,
-                n_attrs=gran.n_attrs, n_dec=gran.n_dec, v_max=gran.v_max,
-            )
-    else:
-        gran = raw_granularity(x, d, n_dec=n_dec, v_max=v_max)
+    gran = resolve_granularity(
+        x, d, source=source, grc_init=grc_init, n_dec=n_dec, v_max=v_max,
+        exact=exact, chunk_rows=chunk_rows)
 
     A = gran.n_attrs
     m = gran.n_dec
@@ -435,14 +516,14 @@ def sum_terms(x, cols: Sequence[int], seed: int):
     return h
 
 
-def har_reduce(x, d, **kw) -> ReductionResult:
+def har_reduce(x=None, d=None, **kw) -> ReductionResult:
     """Paper baseline: Algorithm 1 — no GrC, sequential, re-key per candidate."""
     kw.setdefault("mode", "spark")
     kw.setdefault("mp_chunk", 1)
     return plar_reduce(x, d, grc_init=False, shrink=False, **kw)
 
 
-def fspa_reduce(x, d, **kw) -> ReductionResult:
+def fspa_reduce(x=None, d=None, **kw) -> ReductionResult:
     """Paper baseline: FSPA — HAR + exact universe shrinking (positive approximation)."""
     kw.setdefault("mode", "spark")
     kw.setdefault("mp_chunk", 1)

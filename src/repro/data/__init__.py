@@ -1,9 +1,9 @@
 from .pipeline import (
-    FeatureSelectedStream, TabularStream, TokenStream,
+    FeatureSelectedStream, GranuleSource, ROW_BLOCK, TabularStream, TokenStream,
     paper_dataset, scaled_paper_dataset,
 )
 
 __all__ = [
-    "FeatureSelectedStream", "TabularStream", "TokenStream",
-    "paper_dataset", "scaled_paper_dataset",
+    "FeatureSelectedStream", "GranuleSource", "ROW_BLOCK", "TabularStream",
+    "TokenStream", "paper_dataset", "scaled_paper_dataset",
 ]

@@ -13,16 +13,26 @@ Streams:
   deterministic per-position mixture so the loss is learnable, not uniform).
 * ``TabularStream``  — synthetic decision tables of the paper's shape
   (categorical features + redundant copies + label-correlated columns),
-  the input to PLAR and to the feature-selected training demo.
+  the input to PLAR and to the feature-selected training demo.  Implements
+  :class:`GranuleSource`: ``chunk``/``shard`` materialize rows blockwise for
+  streaming GrC ingestion (DESIGN.md §3.6) with the same restart/elastic
+  contract as ``TokenStream``.
 * ``FeatureSelectedStream`` — applies a PLAR reduct to a TabularStream:
   the paper's technique as a first-class pipeline stage.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from functools import lru_cache
+from typing import Dict, Iterator, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
+
+# Canonical generation block: tabular rows are generated (and cached) in
+# fixed blocks of this many rows, so ``chunk(step, chunk_rows)`` is a pure
+# function of ``(seed, step)`` for *every* chunk size — chunk boundaries
+# re-slice the same underlying row sequence instead of re-drawing it.
+ROW_BLOCK = 65536
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +61,92 @@ class TokenStream:
         return {k: v[lo:hi] for k, v in full.items()}
 
 
+@runtime_checkable
+class GranuleSource(Protocol):
+    """What streaming GrC ingestion needs from a decision-table source.
+
+    A ``GranuleSource`` yields the table *chunkwise* — a pure function of
+    ``(seed, step)``, never an iterator with hidden state — plus the static
+    metadata the granularity build needs up front.  ``TabularStream``
+    implements it; so would a real out-of-core reader (Parquet row groups,
+    HDFS splits).  Chunk-size invariance is part of the contract: the
+    concatenation of ``chunk(0..n_chunks-1, c)`` must be the same row
+    sequence for every ``c`` — consumers (``build_granularity_streaming``)
+    rely on it for bit-exact reducts regardless of chunking.
+    """
+
+    n_rows: int
+    n_attrs: int
+    v_max: int
+    n_dec: int
+
+    def n_chunks(self, chunk_rows: int) -> int: ...
+
+    def chunk(self, step: int, chunk_rows: int) -> Tuple[np.ndarray, np.ndarray]: ...
+
+    def shard(self, step: int, shard_index: int, n_shards: int,
+              chunk_rows: int = ROW_BLOCK) -> Tuple[np.ndarray, np.ndarray]: ...
+
+
+# Prototype sets above this size get a most-recent-only cache slot instead
+# of the shared 8-way one: an 8-deep lru_cache could pin several multi-GB
+# sets (sdss: ~5 GB each) for the process lifetime — exactly the
+# resident-memory story streaming ingestion exists to avoid — while no
+# cache at all would regenerate them once per chunk() call.
+_PROTO_CACHE_MAX_BYTES = 1 << 28
+
+
+def _prototypes(stream: "TabularStream"):
+    """Prototype rows + decisions (host-cached; the only O(distinct) state)."""
+    n_proto = max(2, int(stream.n_rows * stream.distinct_fraction))
+    if n_proto * (stream.n_attrs + 1) * 4 > _PROTO_CACHE_MAX_BYTES:
+        return _large_prototypes(stream)
+    return _cached_prototypes(stream)
+
+
+@lru_cache(maxsize=8)
+def _cached_prototypes(stream: "TabularStream"):
+    return _gen_prototypes(stream)
+
+
+@lru_cache(maxsize=1)
+def _large_prototypes(stream: "TabularStream"):
+    return _gen_prototypes(stream)
+
+
+def _gen_prototypes(stream: "TabularStream"):
+    rng = np.random.default_rng(stream.seed)
+    n_proto = max(2, int(stream.n_rows * stream.distinct_fraction))
+    x = rng.integers(0, stream.v_max, (n_proto, stream.n_attrs)).astype(np.int32)
+    for j in range(1, stream.n_attrs):
+        if rng.random() < stream.redundancy:
+            x[:, j] = x[:, rng.integers(0, j)]
+    rel = rng.choice(stream.n_attrs, size=min(stream.relevance, stream.n_attrs),
+                     replace=False)
+    d = np.zeros(n_proto, np.int64)
+    for i, a in enumerate(rel):
+        d = d * stream.v_max + x[:, a]
+    d = (d % stream.n_dec).astype(np.int32)
+    flip = rng.random(n_proto) < stream.noise
+    d[flip] = rng.integers(0, stream.n_dec, flip.sum())
+    return x, d
+
+
+@lru_cache(maxsize=32)
+def _index_block(stream: "TabularStream", block: int) -> np.ndarray:
+    """Prototype indices for canonical row block ``block`` — pure in
+    ``(seed, block)``, so any chunking re-derives the same rows."""
+    # arithmetic, NOT _prototypes(stream): reading the shape must not force
+    # a (potentially uncached multi-GB) prototype generation
+    n_proto = max(2, int(stream.n_rows * stream.distinct_fraction))
+    lo = block * ROW_BLOCK
+    hi = min(lo + ROW_BLOCK, stream.n_rows)
+    rng = np.random.default_rng((stream.seed, block))
+    # zipf-ish prototype popularity, like real log/connection data
+    w = 1.0 / np.arange(1, n_proto + 1)
+    return rng.choice(n_proto, size=hi - lo, p=w / w.sum())
+
+
 @dataclasses.dataclass(frozen=True)
 class TabularStream:
     """Synthetic decision tables shaped like the paper's datasets.
@@ -60,6 +156,10 @@ class TabularStream:
     (KDD99 especially) are massively redundant — that redundancy is exactly
     what GrC initialization exploits (|U/A| ≪ |U|), so the stand-ins must
     reproduce it for Fig. 9 to be meaningful.
+
+    A :class:`GranuleSource`: rows materialize chunkwise (``chunk``/
+    ``shard``, pure in ``(seed, step)``), and ``table()`` is just the
+    all-chunks concatenation — paper-scale tables never need it.
     """
     n_rows: int
     n_attrs: int
@@ -71,27 +171,51 @@ class TabularStream:
     distinct_fraction: float = 1.0
     seed: int = 0
 
+    def _rows(self, lo: int, hi: int):
+        """Rows [lo, hi) of the logical table, assembled from canonical blocks."""
+        x, d = _prototypes(self)
+        if x.shape[0] >= self.n_rows:
+            # every row is its own prototype — no sampling stage.  Copy: a
+            # view would let caller mutation corrupt the process-wide
+            # prototype cache and break the pure-(seed, step) contract.
+            return x[lo:hi].copy(), d[lo:hi].copy()
+        parts = []
+        for b in range(lo // ROW_BLOCK, -(-hi // ROW_BLOCK)):
+            blk = _index_block(self, b)
+            s = max(lo - b * ROW_BLOCK, 0)
+            e = min(hi - b * ROW_BLOCK, len(blk))
+            parts.append(blk[s:e])
+        idx = np.concatenate(parts) if len(parts) != 1 else parts[0]
+        return x[idx], d[idx]
+
+    def n_chunks(self, chunk_rows: int) -> int:
+        return -(-self.n_rows // chunk_rows)
+
+    def chunk(self, step: int, chunk_rows: int = ROW_BLOCK):
+        """Rows ``[step·chunk_rows, (step+1)·chunk_rows)`` — pure in (seed, step)."""
+        lo = step * chunk_rows
+        if not 0 <= lo < self.n_rows:
+            raise IndexError(
+                f"chunk step {step} out of range for {self.n_chunks(chunk_rows)} chunks")
+        return self._rows(lo, min(lo + chunk_rows, self.n_rows))
+
+    def chunks(self, chunk_rows: int = ROW_BLOCK) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """All chunks in order (the streaming-ingestion driver input)."""
+        return (self.chunk(i, chunk_rows) for i in range(self.n_chunks(chunk_rows)))
+
+    def shard(self, step: int, shard_index: int, n_shards: int,
+              chunk_rows: int = ROW_BLOCK):
+        """Shard ``shard_index``'s slice of ``chunk(step)`` — same elastic
+        contract as :meth:`TokenStream.shard`: shards partition the chunk,
+        re-sharding never replays or skips rows."""
+        x, d = self.chunk(step, chunk_rows)
+        n = x.shape[0]
+        lo = shard_index * n // n_shards
+        hi = (shard_index + 1) * n // n_shards
+        return x[lo:hi], d[lo:hi]
+
     def table(self):
-        rng = np.random.default_rng(self.seed)
-        n_proto = max(2, int(self.n_rows * self.distinct_fraction))
-        x = rng.integers(0, self.v_max, (n_proto, self.n_attrs)).astype(np.int32)
-        for j in range(1, self.n_attrs):
-            if rng.random() < self.redundancy:
-                x[:, j] = x[:, rng.integers(0, j)]
-        rel = rng.choice(self.n_attrs, size=min(self.relevance, self.n_attrs),
-                         replace=False)
-        d = np.zeros(n_proto, np.int64)
-        for i, a in enumerate(rel):
-            d = d * self.v_max + x[:, a]
-        d = (d % self.n_dec).astype(np.int32)
-        flip = rng.random(n_proto) < self.noise
-        d[flip] = rng.integers(0, self.n_dec, flip.sum())
-        if n_proto < self.n_rows:
-            # zipf-ish prototype popularity, like real log/connection data
-            w = 1.0 / np.arange(1, n_proto + 1)
-            idx = rng.choice(n_proto, size=self.n_rows, p=w / w.sum())
-            return x[idx], d[idx]
-        return x, d
+        return self._rows(0, self.n_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +255,9 @@ def paper_dataset(name: str, seed: int = 0) -> TabularStream:
         "gisette": (6000, 5000, 2, 2, 1.0),
         "sdss": (320_000, 5201, 8, 17, 0.8),
     }
+    if name not in shapes:
+        raise ValueError(
+            f"unknown dataset: {name!r} (one of: {', '.join(sorted(shapes))})")
     rows, attrs, vmax, classes, distinct = shapes[name]
     return TabularStream(n_rows=rows, n_attrs=attrs, v_max=vmax, n_dec=classes,
                          distinct_fraction=distinct, seed=seed)

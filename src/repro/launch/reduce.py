@@ -2,10 +2,17 @@
 
     python -m repro.launch.reduce --dataset mushroom --delta SCE
     python -m repro.launch.reduce --dataset sdss --delta PR --distributed --mesh 4,2
+    python -m repro.launch.reduce --dataset kdd99 --stream
 
 ``--distributed`` runs the mesh MDP implementation (requires the process to
 have been started with enough devices, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+``--stream`` runs the dataset at its *full* Table-5 shape through streaming
+GrC ingestion (DESIGN.md §3.6): the table is generated and granulated in
+``--chunk-rows`` chunks, so peak host memory is O(chunk + granularity
+capacity) — never the 5M×41 array.  ``--max-rows``/``--max-attrs`` apply
+only to the non-streaming path.
 """
 from __future__ import annotations
 
@@ -17,8 +24,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", required=True)
     ap.add_argument("--delta", default="SCE", choices=["PR", "SCE", "LCE", "CCE"])
-    ap.add_argument("--max-rows", type=int, default=20000)
-    ap.add_argument("--max-attrs", type=int, default=64)
+    ap.add_argument("--stream", action="store_true",
+                    help="full paper-scale shape via streaming GrC ingestion")
+    ap.add_argument("--chunk-rows", type=int, default=65536,
+                    help="rows granulated per streaming chunk")
+    ap.add_argument("--max-rows", type=int, default=None,
+                    help="row cap, non-streaming path only (default 20000)")
+    ap.add_argument("--max-attrs", type=int, default=None,
+                    help="attribute cap, non-streaming path only (default 64)")
     ap.add_argument("--max-features", type=int, default=None)
     ap.add_argument("--mode", default="incremental", choices=["incremental", "spark"])
     ap.add_argument("--backend", default="segment",
@@ -37,10 +50,33 @@ def main():
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
-    from repro.data import scaled_paper_dataset
+    from repro.data import paper_dataset, scaled_paper_dataset
 
-    x, d = scaled_paper_dataset(args.dataset, max_rows=args.max_rows,
-                                max_attrs=args.max_attrs).table()
+    if args.stream:
+        # refuse inapplicable knobs rather than silently ignoring them
+        # (same policy as the --distributed block below)
+        dropped = [name for name, off_default in [
+            ("--max-rows", args.max_rows is not None),
+            ("--max-attrs", args.max_attrs is not None),
+            # --no-grc would materialize the full table (HAR has no
+            # compressed representation to stream into), silently voiding
+            # the O(chunk + capacity) memory bound --stream promises
+            ("--no-grc", args.no_grc),
+        ] if off_default]
+        if dropped:
+            ap.error(f"{', '.join(dropped)} not supported with --stream "
+                     "(streaming runs the full Table-5 shape under GrC init)")
+        source = paper_dataset(args.dataset)
+        table_shape = [source.n_rows, source.n_attrs]
+        x = d = None
+    else:
+        source = None
+        x, d = scaled_paper_dataset(
+            args.dataset,
+            max_rows=args.max_rows if args.max_rows is not None else 20000,
+            max_attrs=args.max_attrs if args.max_attrs is not None else 64,
+        ).table()
+        table_shape = list(x.shape)
 
     if args.distributed:
         # the mesh driver has no mode/backend/shrink knobs — refuse rather
@@ -59,14 +95,17 @@ def main():
 
         shape = tuple(int(v) for v in args.mesh.split(","))
         mesh = make_mesh(shape, ("data", "model"))
-        r = plar_reduce_distributed(x, d, mesh, delta=args.delta,
+        r = plar_reduce_distributed(x, d, mesh, source=source,
+                                    chunk_rows=args.chunk_rows,
+                                    delta=args.delta,
                                     max_features=args.max_features,
                                     collective=args.collective,
                                     engine=args.engine)
     else:
         from repro.core import plar_reduce
 
-        r = plar_reduce(x, d, delta=args.delta, mode=args.mode,
+        r = plar_reduce(x, d, source=source, chunk_rows=args.chunk_rows,
+                        delta=args.delta, mode=args.mode,
                         backend=args.backend, engine=args.engine,
                         shrink=args.shrink,
                         mp_chunk=args.mp_chunk, grc_init=not args.no_grc,
@@ -74,7 +113,7 @@ def main():
 
     out = {
         "dataset": args.dataset, "delta": args.delta,
-        "table_shape": list(x.shape),
+        "table_shape": table_shape,
         "reduct": r.reduct, "core": r.core,
         "theta_full": r.theta_full, "iterations": r.iterations,
         "n_evaluations": r.n_evaluations, "elapsed_s": round(r.elapsed_s, 3),

@@ -82,6 +82,32 @@ for delta in ["PR", "SCE"]:
 """)
 
 
+def test_distributed_streaming_source_matches_array_path():
+    """Granularity-first mesh ingestion (DESIGN.md §3.6): per-shard streaming
+    build == sharded full-table build == single-process reduct, and a
+    prebuilt host Granularity placed on the mesh agrees too."""
+    _run("""
+import numpy as np, jax.numpy as jnp
+from repro.core import build_granularity, plar_reduce
+from repro.core.distributed import plar_reduce_distributed
+from repro.data import TabularStream
+from repro.distributed.api import make_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+t = TabularStream(n_rows=3000, n_attrs=9, v_max=3, n_dec=2,
+                  distinct_fraction=0.2, seed=1)
+x, d = t.table()
+for delta in ["SCE", "PR"]:
+    want = plar_reduce(x, d, delta=delta).reduct
+    arr = plar_reduce_distributed(x, d, mesh, delta=delta).reduct
+    src = plar_reduce_distributed(mesh=mesh, source=t, chunk_rows=512,
+                                  delta=delta).reduct
+    g = build_granularity(jnp.asarray(x), jnp.asarray(d), n_dec=2, v_max=3)
+    pre = plar_reduce_distributed(mesh=mesh, source=g, delta=delta).reduct
+    assert arr == src == pre == want, (delta, arr, src, pre, want)
+""")
+
+
 def test_distributed_plar_multipod_mesh():
     _run("""
 import numpy as np, jax
