@@ -103,6 +103,81 @@ def engine_host_vs_device() -> List[Dict]:
     return rows
 
 
+def sweep_ladder_speedup() -> List[Dict]:
+    """Per-iteration wall-clock of the §5.3 eval-sweep configs vs the PR-2
+    device engine (``backend="segment"``, ladder off), same tables.
+
+    Grid: ladder on/off × sweep_xla/segment, on GrC-compressed tables
+    (incl. the ≥32-attribute acceptance shapes) and a dense-granule one.
+    The speedup column is vs the PR-2 baseline; reducts are asserted
+    identical across all four configs on every shape.
+
+    XLA:CPU caveat: ``lax.while_loop`` bodies run mostly single-threaded
+    (only top-level jit calls parallelize across cores), so the engine-
+    resident sweep is benchmarked on dispatch-bound GrC shapes — the regime
+    the §3.5 engine exists for.  The dense-granule row is the compute-bound
+    reference where the ladder has little to cut (K ≈ G from the first
+    iteration, so every iteration runs near the top rung).  On TPU/GPU the
+    single-threaded-body asymmetry disappears and the saved bins translate
+    directly into saved HBM traffic.
+
+    Snapshot with ``python -m benchmarks.run --preset sweep`` →
+    ``benchmarks/BENCH_sweep.json``.
+    """
+    from repro.core import plar_reduce
+
+    shapes = [
+        # (kind, rows, attrs, latent, vmax) — ≥32 attrs are the acceptance
+        # shapes; vmax=4 gives cap·V = 4096 bins, a 5-rung ladder
+        ("grc", 20000, 32, 5, 4),
+        ("grc", 50000, 48, 5, 4),
+        ("dense", 4000, 16, None, 3),
+    ]
+    configs = [
+        ("segment", False),   # the PR-2 device engine (baseline)
+        ("segment", True),
+        ("sweep_xla", False),
+        ("sweep_xla", True),
+    ]
+    rows = []
+    for kind, n, a, nl, vmax in shapes:
+        if kind == "grc":
+            x, d = _latent_table(n, a, nl, vmax, seed=n + a)
+        else:
+            x, d = _dense_table(n, a, vmax, seed=n + a)
+        per = {}
+        reducts = {}
+        for backend, ladder in configs:
+            def run():
+                return plar_reduce(x, d, delta="SCE", engine="device",
+                                   backend=backend, ladder=ladder,
+                                   compute_core=False, mp_chunk=64)
+
+            run()                       # warm: compiles for this config
+            best, r = None, None
+            for _ in range(3):
+                r = run()
+                t = sum(r.per_iteration_s) / max(r.iterations, 1)
+                best = t if best is None else min(best, t)
+            per[(backend, ladder)] = best
+            reducts[(backend, ladder)] = r.reduct
+        assert len(set(map(tuple, reducts.values()))) == 1, \
+            "sweep/ladder configs disagree on the reduct"
+        base = per[("segment", False)]
+        row = {
+            "table": f"{kind} n{n} A{a}" + (f" latent{nl}" if nl else ""),
+            "iterations": len(reducts[("segment", False)]),
+            "baseline_ms": round(base * 1e3, 2),
+        }
+        for backend, ladder in configs[1:]:
+            key = f"{backend}_ladder_{'on' if ladder else 'off'}"
+            row[f"{key}_ms"] = round(per[(backend, ladder)] * 1e3, 2)
+            row[f"{key}_speedup"] = round(base / max(per[(backend, ladder)], 1e-9), 2)
+        rows.append(row)
+    return rows
+
+
 ALL_ENGINE_BENCHES = {
     "engine_host_vs_device": engine_host_vs_device,
+    "sweep_ladder_speedup": sweep_ladder_speedup,
 }

@@ -1,7 +1,8 @@
 """Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One section per paper table/figure (paper_tables.py) + kernel micro-benches.
-Pass table names to run a subset: ``python -m benchmarks.run table_12 fig_9``.
+Pass table names to run a subset: ``python -m benchmarks.run table_12 fig_9``;
+``--list`` prints every selectable section and preset.
 Results are printed as aligned text and mirrored to benchmarks/results.json;
 ``--tag NAME`` additionally snapshots them to ``benchmarks/BENCH_NAME.json``
 (timestamped), building the per-PR perf trajectory — see benchmarks/README.md.
@@ -32,6 +33,7 @@ PRESETS = {
     "engine": ["engine_host_vs_device"],
     "kernels": ["contingency_backends", "fused_theta_vs_unfused"],
     "ingest": ["ingest_stream_vs_monolithic"],
+    "sweep": ["sweep_ladder_speedup"],
 }
 
 
@@ -70,6 +72,15 @@ def main() -> None:
             **ALL_INGEST_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
+    if "--list" in argv:
+        print("sections:")
+        for name in sorted(selectable):
+            note = "  (explicit-only)" if name in EXPLICIT_BENCHES else ""
+            print(f"  {name}{note}")
+        print("presets (--preset NAME, implies --tag NAME):")
+        for name in sorted(PRESETS):
+            print(f"  {name}: {', '.join(PRESETS[name])}")
+        return
     if wanted:
         unknown = [s for s in wanted if s not in selectable]
         if unknown:

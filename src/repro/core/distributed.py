@@ -63,6 +63,7 @@ from .engine import (
     _advance,
     _eval_mesh,
     _make_cond_body,
+    _mesh_cand_slab,
     init_state,
     merge_candidate_cont,
     run_engine,
@@ -74,7 +75,7 @@ from .granularity import (
     next_pow2,
     with_capacity,
 )
-from .plan import contingency_from_ids
+from .plan import contingency_from_ids, ladder_rungs, rung_for
 from .reduction import (
     ReductionResult,
     _check_source_args,
@@ -104,17 +105,30 @@ def _n_model_shards(mesh: Mesh) -> int:
 # ---------------------------------------------------------------------------
 
 
-@lru_cache(maxsize=None)
 def _eval_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int,
                collective: str, *, table_dtype: str = "int32",
-               fused_pack: bool = False):
+               fused_pack: bool = False, backend: str = "segment"):
     """shard_map: candidates over 'model' × granules over data → thetas [A].
 
     §Perf knobs: ``table_dtype="int8"`` stores the granule table x/d in one
     byte per cell (v_max < 128), quartering the dominant column-read traffic;
     ``fused_pack`` folds the id-packing arithmetic into the per-candidate
-    segment expression instead of materializing ``packed [A_loc, G_loc]``.
+    segment expression instead of materializing ``packed [A_loc, G_loc]``;
+    ``backend="sweep_xla"`` (DESIGN.md §5.3) is that same fused-pack
+    formulation — in this host-dispatched step the candidate set changes
+    every iteration, so there is no loop-invariant slab to hoist and the
+    column-wise pack is the read-once form.  ``n_bins`` may be any §5.3
+    ladder rung ≥ K·V.
     """
+    # thin wrapper: defaulted and keyword calls must share one lru entry
+    # (the single-compile contract — same normalization as make_engine_run)
+    return _eval_step_cached(mesh, delta, n_bins, m, v_max, collective,
+                             table_dtype, fused_pack or backend == "sweep_xla")
+
+
+@lru_cache(maxsize=None)
+def _eval_step_cached(mesh, delta, n_bins, m, v_max, collective, table_dtype,
+                      fused_pack):
     daxes = _data_axes(mesh)
     nd = _n_data_shards(mesh)
 
@@ -204,7 +218,8 @@ def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
 @lru_cache(maxsize=None)
 def _engine_run_mesh(mesh: Mesh, delta: str, n_attrs: int, cap: int, m: int,
                      v_max: int, tol: float, tie_tol: float, collective: str,
-                     max_sel: int):
+                     max_sel: int, backend: str = "segment",
+                     ladder: bool = False):
     """The device-resident greedy core (engine.py) wrapped in ``shard_map``.
 
     One jitted while_loop runs the entire reduction: granules stay sharded
@@ -227,14 +242,17 @@ def _engine_run_mesh(mesh: Mesh, delta: str, n_attrs: int, cap: int, m: int,
     # cfg.cap is the *global* capacity: r_ids are globally-dense, so the
     # packed-id bound K·V ≤ cap·V must cover all shards together.  The MP
     # level on the mesh is the 'model' axis itself, so mp_chunk is inert.
-    cfg = _Cfg(delta, "incremental", "segment", n_attrs, cap, m, v_max,
-               tol, tie_tol, False, max_sel, n_attrs)
+    cfg = _Cfg(delta, "incremental", backend, n_attrs, cap, m, v_max,
+               tol, tie_tol, False, max_sel, n_attrs, ladder)
 
     def local(st, x, d, w, n, theta_full, core_attrs, core_count):
         coll = _MeshColl(daxes, nd, has_model)
+        # this shard's candidate slab, gathered+transposed once per run —
+        # not per iteration (the §5.3 hoist, same as the local engine's x.T)
+        x_tl = _mesh_cand_slab(cfg, coll, nm, x)
         cond, body = _make_cond_body(
             cfg, coll,
-            lambda s: _eval_mesh(cfg, coll, collective, nm, s, x, d, w, n),
+            lambda s: _eval_mesh(cfg, coll, collective, s, x_tl, d, w, n),
             x, d, w, n, theta_full, core_attrs, core_count)
         return jax.lax.while_loop(cond, body, st)
 
@@ -456,6 +474,8 @@ def plar_reduce_distributed(
     tie_tol: float = 1e-5,
     max_features: Optional[int] = None,
     collective: str = "all_reduce",     # | "reduce_scatter" | "fused" (§Perf)
+    backend: str = "segment",           # | "sweep_xla" (read-once slab, §5.3)
+    ladder: bool = False,               # K-adaptive bin ladder (§5.3)
     compute_core: bool = True,
     grc_init: bool = True,
     engine: str = "auto",               # "device" while_loop | "host" legacy loop
@@ -466,6 +486,10 @@ def plar_reduce_distributed(
         raise ValueError(
             f"unknown collective: {collective!r} "
             "(one of: all_reduce, reduce_scatter, fused)")
+    if backend not in ("segment", "sweep_xla"):
+        raise ValueError(
+            f"unknown mesh Θ backend: {backend!r} (one of: segment, "
+            "sweep_xla — the Pallas/interpret backends are single-process)")
     if engine not in ("auto", "host", "device"):
         raise ValueError(
             f"unknown engine: {engine!r} (one of: auto, host, device)")
@@ -474,6 +498,10 @@ def plar_reduce_distributed(
             "engine='device' cannot run the 'fused' collective: its class "
             "regrouping stages granules through the host between iterations; "
             "use engine='host'")
+    if collective == "fused" and backend != "segment":
+        raise ValueError(
+            "collective='fused' has its own fused contingency→Θ schedule; "
+            "backend must stay 'segment'")
     if engine == "auto":
         engine = "host" if collective == "fused" else "device"
     if mesh is None:
@@ -557,7 +585,7 @@ def plar_reduce_distributed(
         max_sel = int(max_features) if max_features is not None else A
         runner = _engine_run_mesh(
             mesh, delta, A, cap, n_dec, v_max, float(tol), float(tie_tol),
-            collective, max_sel)
+            collective, max_sel, backend, bool(ladder))
         reduct, theta_hist, iterations, ev, per_iter = run_engine(
             runner, cap, A, gvalid, gx, gd, gw, n, theta_full, core)
         return ReductionResult(
@@ -578,11 +606,25 @@ def plar_reduce_distributed(
     theta_hist: List[float] = []
     per_iter_s: List[float] = []
 
-    def bins_for(k_):
+    rungs = ladder_rungs(cap * v_max)
+
+    def adv_bins_for(k_):
+        # The advance bound is ladder-independent (the §5.3 ladder shrinks
+        # only the candidate evaluation), so theta histories are identical
+        # with the ladder on or off.
         return _next_pow2(max(k_, 1)) * v_max
 
+    def bins_for(k_):
+        # Candidate-eval bound.  Ladder on: snap to the §5.3 rungs — every
+        # rung is divisible by the (pow2) data-shard count, so
+        # reduce_scatter keeps tiling at every K.  Ladder off: the legacy
+        # pow2(k)·V bound.
+        if ladder:
+            return rung_for(k_, v_max, rungs)
+        return adv_bins_for(k_)
+
     for a in core:
-        adv = _advance_step(mesh, delta, bins_for(k), n_dec, v_max)
+        adv = _advance_step(mesh, delta, adv_bins_for(k), n_dec, v_max)
         a_col = jnp.take(gx, a, axis=1)
         r_ids, k_new, theta_r = adv(a_col, r_ids, gd, gw, gvalid, n)
         k = int(k_new)
@@ -616,7 +658,8 @@ def plar_reduce_distributed(
             else:
                 gx, gd, gw, gvalid, r_ids = regrouped
 
-        ev = _eval_step(mesh, delta, n_bins, n_dec, v_max, iter_collective)
+        ev = _eval_step(mesh, delta, n_bins, n_dec, v_max, iter_collective,
+                        backend=backend)
         thetas = np.asarray(ev(cand_dev, r_ids, gx, gd, gw, gvalid, n), np.float64)
         thetas = thetas[: len(remaining)]
         n_evals += len(remaining)
@@ -624,7 +667,7 @@ def plar_reduce_distributed(
         best = measures.argmin_with_ties(thetas, tie_tol)
         a_opt = remaining[best]
 
-        adv = _advance_step(mesh, delta, n_bins, n_dec, v_max)
+        adv = _advance_step(mesh, delta, adv_bins_for(k), n_dec, v_max)
         a_col = jnp.take(gx, a_opt, axis=1)
         r_ids, k_new, theta_new = adv(a_col, r_ids, gd, gw, gvalid, n)
         k = int(k_new)

@@ -36,10 +36,17 @@ the host between iterations (its class re-grouping stages granule tables
 through the driver), so it stays on the legacy host loop — see
 ``plar_reduce_distributed``.
 
+The candidate evaluation is K-adaptive when ``ladder=True`` (DESIGN.md
+§5.3): a ``lax.switch`` on the device-resident ``st.k`` picks the smallest
+static bin rung covering ``K·v_max``, every rung branch living inside the
+one while_loop compile, and the candidate slab ``x.T`` is hoisted out of
+the loop.  The advance keeps the full static bound, so theta histories are
+byte-identical with the ladder on or off.
+
 Where the host loop is still required (the ``engine="host"`` escape hatch):
 
-* ``backend="pallas"`` / ``"fused"`` — the interpret-mode Pallas kernels are
-  not exercised inside ``while_loop`` bodies;
+* ``backend="pallas"`` / ``"fused"`` / ``"sweep"`` — the interpret-mode
+  Pallas kernels are not exercised inside ``while_loop`` bodies;
 * ``collective="fused"`` — host-staged class regrouping (above);
 * per-iteration wall-clock introspection (the host loop times each iteration
   individually; the engine reports the loop-average).
@@ -47,7 +54,7 @@ Where the host loop is still required (the ``engine="host"`` escape hatch):
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -56,7 +63,13 @@ import numpy as np
 
 from . import measures
 from .granularity import dyn_column_terms, ids_from_presence, presence_bitmap
-from .plan import candidate_theta, contingency_from_ids, ids_by_sort
+from .plan import (
+    candidate_theta,
+    contingency_from_ids,
+    ids_by_sort,
+    ladder_rungs,
+    sweep_contingency,
+)
 
 __all__ = [
     "SelectionState",
@@ -68,7 +81,9 @@ __all__ = [
 ]
 
 # Θ backends that may run inside the while_loop body (DESIGN.md §3.5).
-DEVICE_BACKENDS = ("segment", "onehot", "fused_xla")
+# ``sweep_xla`` is the read-once slab backend of DESIGN.md §5.3; the Pallas
+# kernels (``pallas``/``fused``/``sweep``) stay on the host loop.
+DEVICE_BACKENDS = ("segment", "onehot", "fused_xla", "sweep_xla")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -148,6 +163,7 @@ class _Cfg:
     shrink: bool
     max_sel: int         # max_features, or n_attrs when unbounded
     mp_chunk: int        # candidates evaluated per inner step (memory bound)
+    ladder: bool = False  # K-adaptive bin ladder for the eval sweep (§5.3)
 
     @property
     def n_bins(self) -> int:
@@ -155,6 +171,13 @@ class _Cfg:
         # and K ≤ cap always, so cap·V bounds every iteration.  Padding rows
         # are all-zero and contribute exactly 0 to every measure.
         return self.cap * self.v_max
+
+    @property
+    def rungs(self):
+        # The static bucket set the eval sweep selects from per iteration
+        # when ``ladder`` is on; the top rung is the full n_bins bound, so
+        # the ladder-off path is exactly the degenerate one-rung ladder.
+        return ladder_rungs(self.n_bins)
 
 
 # ---------------------------------------------------------------------------
@@ -223,14 +246,32 @@ def _advance(cfg: _Cfg, coll, r_ids, x_col, d, w, active, n):
     return new_ids, k_new.astype(jnp.int32), theta, g_pure
 
 
-def _eval_local(cfg: _Cfg, st: SelectionState, x, d, w, n):
-    """Single-process candidate evaluation: Θ(D|R∪{a}) for every a, [A]."""
+def _rung_index(cfg: _Cfg, k):
+    """Device-side ladder rung selection: first rung ≥ K·V (DESIGN.md §5.3).
+
+    ``k`` is the device-resident class count (``st.k``): packed ids live in
+    ``[0, K·V)``, rungs are ascending, and the top rung is the exact full
+    bound, so the index is always in range — no host sync, no clamp.
+    """
+    need = k.astype(jnp.int32) * cfg.v_max
+    return jnp.sum(need > jnp.asarray(cfg.rungs, jnp.int32)).astype(jnp.int32)
+
+
+def _eval_local(cfg: _Cfg, st: SelectionState, x, x_t, d, w, n):
+    """Single-process candidate evaluation: Θ(D|R∪{a}) for every a, [A].
+
+    ``x_t`` is the pre-transposed ``[A, cap]`` candidate slab, hoisted out of
+    the loop by the callers: candidate rows are contiguous slices instead of
+    a per-iteration gather+transpose of ``x``.
+    """
     cols = jnp.arange(cfg.n_attrs, dtype=jnp.int32)
     if cfg.mode == "spark":
         # Paper-faithful cost shape: re-key every granule from scratch per
         # candidate (fingerprint sort), exactly `_eval_chunk_spark` but with
         # the R-fingerprints maintained incrementally in the state (the
         # linear-sketch property: h(R∪{a}) = h(R) + term_a, uint32-exact).
+        # The bin ladder does not apply: sort-ranked ids are bounded by the
+        # live-granule count, not K·V.
         def one(col):
             t1 = dyn_column_terms(x, col, 0)
             t2 = dyn_column_terms(x, col, 7919)
@@ -241,23 +282,39 @@ def _eval_local(cfg: _Cfg, st: SelectionState, x, d, w, n):
 
         return jax.lax.map(one, cols) + st.pr_correction
 
-    def chunk(cc):
-        x_cand = jnp.take(x, cc, axis=1).T                     # [nc, cap]
-        packed = st.r_ids[None, :] * cfg.v_max + x_cand
-        return candidate_theta(
-            cfg.delta, packed, d, w, st.active, n,
-            n_bins=cfg.n_bins, m=cfg.m, backend=cfg.backend)
+    def eval_all(nb):
+        def chunk(cc):
+            x_cand = jnp.take(x_t, cc, axis=0)                 # [nc, cap]
+            if cfg.backend == "sweep_xla":
+                return candidate_theta(
+                    cfg.delta, None, d, w, st.active, n,
+                    n_bins=nb, m=cfg.m, backend=cfg.backend,
+                    x_t=x_cand, r_ids=st.r_ids, v_max=cfg.v_max)
+            packed = st.r_ids[None, :] * cfg.v_max + x_cand
+            return candidate_theta(
+                cfg.delta, packed, d, w, st.active, n,
+                n_bins=nb, m=cfg.m, backend=cfg.backend)
 
-    # mp_chunk (the paper's MP level) bounds peak memory to
-    # [mp_chunk, n_bins, m] per inner step, exactly like the host loop's
-    # chunked dispatch; per-candidate values are independent, so chunking
-    # never changes bits.
-    nc = min(cfg.mp_chunk, cfg.n_attrs)
-    a_pad = -(-cfg.n_attrs // nc) * nc
-    if a_pad == nc:
-        return chunk(cols) + st.pr_correction
-    grid = (jnp.arange(a_pad, dtype=jnp.int32) % cfg.n_attrs).reshape(-1, nc)
-    thetas = jax.lax.map(chunk, grid).reshape(-1)[: cfg.n_attrs]
+        # mp_chunk (the paper's MP level) bounds peak memory to
+        # [mp_chunk, nb, m] per inner step, exactly like the host loop's
+        # chunked dispatch; per-candidate values are independent, so chunking
+        # never changes bits.
+        nc = min(cfg.mp_chunk, cfg.n_attrs)
+        a_pad = -(-cfg.n_attrs // nc) * nc
+        if a_pad == nc:
+            return chunk(cols)
+        grid = (jnp.arange(a_pad, dtype=jnp.int32) % cfg.n_attrs).reshape(-1, nc)
+        return jax.lax.map(chunk, grid).reshape(-1)[: cfg.n_attrs]
+
+    if not cfg.ladder or len(cfg.rungs) == 1:
+        return eval_all(cfg.n_bins) + st.pr_correction
+
+    # K-adaptive bin ladder (§5.3): all rung branches trace into the one
+    # while_loop compile; per iteration a lax.switch on the device-resident
+    # st.k picks the smallest rung covering K·V — early iterations pay
+    # K-proportional work with zero recompiles and zero host transfers.
+    thetas = jax.lax.switch(
+        _rung_index(cfg, st.k), [partial(eval_all, nb) for nb in cfg.rungs])
     return thetas + st.pr_correction
 
 
@@ -279,31 +336,58 @@ def merge_candidate_cont(delta, cont, n, coll, collective: str):
     return measures.evaluate(delta, coll.psum_data(cont), n)
 
 
-def _eval_mesh(cfg: _Cfg, coll: _MeshColl, collective, n_model, st, x, d, w, n):
-    """Mesh candidate evaluation: this shard's candidate slice → gather [A].
+def _mesh_cand_slab(cfg: _Cfg, coll: _MeshColl, n_model, x):
+    """This model shard's candidate slice + pre-transposed slab [A_loc, G_loc].
 
-    Contingencies merge via :func:`merge_candidate_cont`; ``n_bins = cap·V``
-    is divisible by the data-shard count because ``cap`` is itself
-    ``nd · cap_per_shard``.
+    Hoisted out of the while_loop by ``_engine_run_mesh``: the gather and
+    transpose of the granule table happen once per run, not per iteration.
     """
     a_pad = -(-cfg.n_attrs // n_model) * n_model
     a_loc = a_pad // n_model
     midx = jax.lax.axis_index("model") if coll.has_model else 0
     cand = jnp.minimum(midx * a_loc + jnp.arange(a_loc, dtype=jnp.int32),
                        cfg.n_attrs - 1)
+    return jnp.take(x, cand, axis=1).T.astype(jnp.int32)
 
+
+def _eval_mesh(cfg: _Cfg, coll: _MeshColl, collective, st, x_tl, d, w, n):
+    """Mesh candidate evaluation: this shard's candidate slab → gather [A].
+
+    ``x_tl [A_loc, G_loc]`` is this shard's pre-transposed candidate slab
+    (:func:`_mesh_cand_slab`).  Contingencies merge via
+    :func:`merge_candidate_cont`; every §5.3 ladder rung stays divisible by
+    the data-shard count (rungs below the top are pow2 multiples of the
+    256-bin tile; the top rung ``cap·V`` has ``cap = nd · cap_per_shard``),
+    so ``reduce_scatter`` keeps tiling at every rung.
+    """
     w_ = jnp.where(st.active, w, 0).astype(jnp.float32)
     d32 = d.astype(jnp.int32)
-    nb = cfg.n_bins
-    x_cand = jnp.take(x, cand, axis=1).T.astype(jnp.int32)     # [A_loc, G_loc]
-    packed = st.r_ids[None, :] * cfg.v_max + x_cand
 
-    def one(p):
-        seg = jnp.where(st.active, p * cfg.m + d32, nb * cfg.m)
-        return jax.ops.segment_sum(w_, seg, num_segments=nb * cfg.m + 1)[:-1]
+    def eval_all(nb):
+        if cfg.backend == "sweep_xla":
+            # fused-pack contingency (packed [A_loc, G_loc] never staged)
+            cont = sweep_contingency(
+                x_tl, st.r_ids, d32, w_, st.active, v_max=cfg.v_max,
+                n_bins=nb, m=cfg.m)
+        else:
+            packed = st.r_ids[None, :] * cfg.v_max + x_tl
 
-    cont = jax.vmap(one)(packed).reshape(-1, nb, cfg.m)        # [A_loc, nb, m]
-    th_loc = merge_candidate_cont(cfg.delta, cont, n, coll, collective)
+            def one(p):
+                seg = jnp.where(st.active, p * cfg.m + d32, nb * cfg.m)
+                return jax.ops.segment_sum(
+                    w_, seg, num_segments=nb * cfg.m + 1)[:-1]
+
+            cont = jax.vmap(one)(packed).reshape(-1, nb, cfg.m)
+        return merge_candidate_cont(cfg.delta, cont, n, coll, collective)
+
+    if not cfg.ladder or len(cfg.rungs) == 1:
+        th_loc = eval_all(cfg.n_bins)
+    else:
+        # K·V is globally consistent (st.k is replicated by the presence-psum
+        # compaction), so every shard switches to the same rung and the
+        # collectives inside each branch stay congruent across the mesh.
+        th_loc = jax.lax.switch(
+            _rung_index(cfg, st.k), [partial(eval_all, nb) for nb in cfg.rungs])
     return coll.gather_model(th_loc, cfg.n_attrs) + st.pr_correction
 
 
@@ -382,44 +466,66 @@ def _make_cond_body(cfg: _Cfg, coll, eval_thetas, x, d, w, n, theta_full,
 # ---------------------------------------------------------------------------
 
 
-@lru_cache(maxsize=None)
 def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
                      cap: int, m: int, v_max: int, tol: float, tie_tol: float,
-                     shrink: bool, max_sel: int, mp_chunk: int = 64):
+                     shrink: bool, max_sel: int, mp_chunk: int = 64,
+                     ladder: bool = False):
     """One jitted greedy iteration (evaluate → argmin → advance).
 
     Exposed for inspection/benchmarks; ``make_engine_run`` inlines the same
     body into its while_loop, so a full reduction costs one compile, not two.
     """
+    # thin wrapper so defaulted and explicit trailing args share one lru
+    # entry (a positional call and a defaulted call must return the SAME
+    # cached jit function — the single-compile contract)
+    return _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max,
+                             tol, tie_tol, shrink, max_sel, mp_chunk, ladder)
+
+
+@lru_cache(maxsize=None)
+def _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max, tol,
+                      tie_tol, shrink, max_sel, mp_chunk, ladder):
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
-               shrink, max_sel, mp_chunk)
+               shrink, max_sel, mp_chunk, ladder)
 
     @jax.jit
     def step(st: SelectionState, x, d, w, n, theta_full, core_attrs,
              core_count) -> SelectionState:
+        x_t = x.T
         coll = _LocalColl()
         _, body = _make_cond_body(
-            cfg, coll, lambda s: _eval_local(cfg, s, x, d, w, n),
+            cfg, coll, lambda s: _eval_local(cfg, s, x, x_t, d, w, n),
             x, d, w, n, theta_full, core_attrs, core_count)
         return body(st)
 
     return step
 
 
-@lru_cache(maxsize=None)
 def make_engine_run(delta: str, mode: str, backend: str, n_attrs: int,
                     cap: int, m: int, v_max: int, tol: float, tie_tol: float,
-                    shrink: bool, max_sel: int, mp_chunk: int = 64):
+                    shrink: bool, max_sel: int, mp_chunk: int = 64,
+                    ladder: bool = False):
     """The full reduction as one ``lax.while_loop`` (single-process)."""
+    return _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max,
+                            tol, tie_tol, shrink, max_sel, mp_chunk, ladder)
+
+
+@lru_cache(maxsize=None)
+def _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max, tol,
+                     tie_tol, shrink, max_sel, mp_chunk, ladder):
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
-               shrink, max_sel, mp_chunk)
+               shrink, max_sel, mp_chunk, ladder)
 
     @jax.jit
     def run(st: SelectionState, x, d, w, n, theta_full, core_attrs,
             core_count) -> SelectionState:
+        # The candidate slab transpose is hoisted out of the while_loop: one
+        # [A, cap] materialization per run instead of a gather+transpose per
+        # iteration (per mp_chunk, per rung branch).
+        x_t = x.T
         coll = _LocalColl()
         cond, body = _make_cond_body(
-            cfg, coll, lambda s: _eval_local(cfg, s, x, d, w, n),
+            cfg, coll, lambda s: _eval_local(cfg, s, x, x_t, d, w, n),
             x, d, w, n, theta_full, core_attrs, core_count)
         return jax.lax.while_loop(cond, body, st)
 
@@ -432,8 +538,10 @@ def run_engine(runner, cap: int, n_attrs: int, valid, x, d, w, n,
     both drivers (``plar_reduce`` and ``plar_reduce_distributed``).
 
     Returns ``(reduct, theta_history, iterations, n_evals, per_iteration_s)``
-    where ``per_iteration_s`` is the loop average over every executed body
-    (the core folds run inside the same while_loop, eval-free and cheaper).
+    where ``per_iteration_s`` holds one entry per *executed loop body* —
+    ``len(reduct)`` entries, core folds included — each the loop average
+    (the engine is a single dispatch, so individual bodies cannot be timed;
+    the list sums to the measured loop wall-clock exactly).
     """
     import time
 
@@ -446,8 +554,9 @@ def run_engine(runner, cap: int, n_attrs: int, valid, x, d, w, n,
                jnp.asarray(core_arr), jnp.int32(len(core))))
     loop_s = time.perf_counter() - t_loop
     reduct, hist, iters, n_evals = unpack_result(fin, len(core))
-    per_body = loop_s / len(reduct) if reduct else 0.0
-    return reduct, hist, iters, n_evals, [per_body] * iters
+    n_bodies = len(reduct)
+    per_body = loop_s / n_bodies if n_bodies else 0.0
+    return reduct, hist, iters, n_evals, [per_body] * n_bodies
 
 
 def unpack_result(fin: SelectionState, core_count: int):

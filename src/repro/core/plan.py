@@ -25,11 +25,28 @@ measure's θ row-reduction into the contingency accumulation so the
 * ``fused_xla`` — the same schedule expressed in XLA: scan over bin tiles,
   θ per finished tile, scalar accumulation (rows = bins, so every tile holds
   complete rows — the property that makes the fusion exact).
+
+Sweep backends (DESIGN.md §5.3) take the *read-once slab* operand form —
+a pre-transposed candidate slab ``x_t [nc, G]`` plus the shared class ids
+``r_ids [G]`` — and fold the id-packing ``p = r·V + v`` into the reduction,
+so ``packed [nc, G]`` never exists as its own buffer:
+
+* ``sweep``     — the multi-candidate Pallas kernel
+  (``kernels/contingency/sweep.py``): each granule tile is loaded once and
+  reused across a block of candidates.
+* ``sweep_xla`` — the host/XLA twin: fused-pack segment contingency + the
+  kernel's tile-ordered θ epilogue (:func:`_theta_tiled_raw`), whose
+  sequential per-tile accumulation is what gives the §5.3 bin ladder its
+  bitwise ladder-on == ladder-off guarantee.
+
+The **bin ladder** (:func:`ladder_rungs`) supplies the static bucket sizes
+the drivers select from per iteration: pow2 multiples of the 256-bin tile up
+to the run's static bound ``cap·v_max`` (itself always the top rung).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +61,54 @@ __all__ = [
     "candidate_theta",
     "contingency_from_ids",
     "theta_for_ids",
+    "ladder_rungs",
+    "rung_for",
+    "LADDER_TILE",
+    "SWEEP_BACKENDS",
 ]
+
+# Bin-tile width of the ladder/sweep schedules (DESIGN.md §5.3): matches the
+# fused kernels' 256-bin tile so every rung is a whole number of θ tiles.
+LADDER_TILE = 256
+
+
+def ladder_rungs(n_bins: int, tile: int = LADDER_TILE) -> Tuple[int, ...]:
+    """Static bin-bucket ladder for K-adaptive evaluation (DESIGN.md §5.3).
+
+    Ascending pow2 multiples of ``tile`` strictly below ``n_bins``, closed by
+    ``n_bins`` itself (the run's exact static bound ``cap·v_max``).  Rung
+    properties the drivers rely on:
+
+    * every rung below the top is ``tile·2^i`` — a power-of-two multiple of
+      the 256-bin θ tile, so it is divisible by any pow2 data-shard count
+      ≤ 256; the top rung ``cap·v_max`` is divisible by the data-shard
+      count on the mesh because ``cap = nd·cap_per_shard`` there
+      (``reduce_scatter`` keeps tiling at every rung);
+    * the top rung is the exact full bound, so selecting "first rung
+      ≥ K·v_max" always succeeds (K ≤ cap);
+    * a smaller rung's θ tiles are a *prefix* of a larger rung's: rungs
+      below the top are whole tile counts, and a top rung that is not
+      (non-pow2 ``cap``, or ``cap < tile``) gets its trailing partial tile
+      zero-padded by :func:`_theta_tiled_raw` — all-zero rows with θ' = 0,
+      so the prefix/bit-parity argument is unaffected.
+    """
+    rungs = []
+    b = tile
+    while b < n_bins:
+        rungs.append(b)
+        b *= 2
+    rungs.append(n_bins)
+    return tuple(rungs)
+
+
+def rung_for(k: int, v_max: int, rungs: Sequence[int]) -> int:
+    """Host-side rung selection: smallest rung ≥ K·v_max.
+
+    The host twin of the device engine's ``_rung_index`` — load-bearing for
+    host/device ladder parity, so both drivers share this one definition.
+    """
+    need = max(k, 1) * v_max
+    return next(r for r in rungs if r >= need)
 
 
 def ids_by_sort(keys: Sequence[jnp.ndarray], valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -185,7 +249,71 @@ def _theta_fused_xla(delta, packed, d, w, valid, n, *, n_bins, m, bin_chunk: int
     return measures.theta_scale(delta, raw, n)
 
 
-@partial(jax.jit, static_argnames=("delta", "n_bins", "m", "backend", "interpret"))
+# ---------------------------------------------------------------------------
+# sweep backend: read-once candidate slab + tile-ordered θ (DESIGN.md §5.3)
+# ---------------------------------------------------------------------------
+
+
+def sweep_contingency(x_t, r_ids, d, w, valid, *, v_max: int, n_bins: int, m: int):
+    """Fused-pack contingency: slab ``x_t [nc, G]`` + shared ``r_ids [G]``.
+
+    The id-packing ``p = r·V + v`` folds into the per-candidate segment
+    expression, so ``packed [nc, G]`` is never staged as its own buffer —
+    the XLA twin of the sweep kernel's in-register pack.  Counts are
+    scatter-adds of integer-valued f32 weights: exact and order-independent
+    below 2²⁴, so the result is bit-identical to the ``segment`` backend's
+    pack-then-reduce for every bin bound ≥ K·V.
+    """
+    w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+    d32 = d.astype(jnp.int32)
+
+    def one(x_row):
+        seg = jnp.where(valid, (r_ids * v_max + x_row) * m + d32, n_bins * m)
+        return jax.ops.segment_sum(
+            w_, seg, num_segments=n_bins * m + 1)[:-1].reshape(n_bins, m)
+
+    return jax.vmap(one)(x_t)
+
+
+def _theta_tiled_raw(delta, cont, *, tile: int = LADDER_TILE):
+    """Sequential per-tile θ' accumulation over bin tiles — the sweep
+    kernel's epilogue order expressed on a materialized contingency.
+
+    ``cont [nc, nb, m]`` is split into ``ceil(nb/tile)`` bin tiles (trailing
+    tile zero-padded) and θ' is accumulated tile-by-tile in ascending order
+    via a scan carry: a fixed-length within-tile reduction plus a sequential
+    chain of f32 scalar adds.  This is the load-bearing structure of the bin
+    ladder's bit-parity guarantee (DESIGN.md §5.3): a smaller rung's tiles
+    are a prefix of a larger rung's, and every dropped trailing tile holds
+    only all-zero rows whose θ' is exactly 0 — adding exact zeros in the
+    same order cannot change the f32 value.
+    """
+    nc, nb, m = cont.shape
+    n_tiles = -(-nb // tile)
+    if n_tiles * tile != nb:
+        cont = jnp.pad(cont, ((0, 0), (0, n_tiles * tile - nb), (0, 0)))
+    tiles = jnp.moveaxis(cont.reshape(nc, n_tiles, tile, m), 1, 0)
+
+    def step(carry, tile_cont):
+        return carry + measures.RAW_ROWS[delta](tile_cont).sum(-1), None
+
+    raw, _ = jax.lax.scan(step, jnp.zeros((nc,), jnp.float32), tiles)
+    return raw
+
+
+def _theta_sweep_xla(delta, x_t, r_ids, d, w, valid, n, *, v_max, n_bins, m):
+    """Normalized Θ via the sweep schedule: fused-pack contingency +
+    tile-ordered θ epilogue (single-process / per-shard-local path)."""
+    cont = sweep_contingency(
+        x_t, r_ids, d, w, valid, v_max=v_max, n_bins=n_bins, m=m)
+    return measures.theta_scale(delta, _theta_tiled_raw(delta, cont), n)
+
+
+SWEEP_BACKENDS = ("sweep", "sweep_xla")
+
+
+@partial(jax.jit, static_argnames=("delta", "n_bins", "m", "backend",
+                                   "interpret", "v_max"))
 def candidate_theta(
     delta: str,
     packed: jnp.ndarray,
@@ -198,6 +326,9 @@ def candidate_theta(
     m: int,
     backend: str = "segment",
     interpret: bool = True,
+    x_t: Optional[jnp.ndarray] = None,
+    r_ids: Optional[jnp.ndarray] = None,
+    v_max: Optional[int] = None,
 ) -> jnp.ndarray:
     """Θ(D|B∪{a})[c] for a batch of candidates — the full MAP+REDUCE+sum.
 
@@ -205,7 +336,28 @@ def candidate_theta(
     it with :func:`repro.core.measures.evaluate`; ``fused``/``fused_xla`` fold
     the θ epilogue into the accumulation (DESIGN.md §5.2) and never build the
     [nc, K, M] tensor.
+
+    The sweep backends (DESIGN.md §5.3) take the read-once slab operands
+    ``x_t [nc, G]`` + ``r_ids [G]`` + static ``v_max`` instead of ``packed``
+    (pass ``packed=None``): the pack is fused into the reduction and θ runs
+    as the tile-ordered epilogue, so ``n_bins`` may be any §5.3 ladder rung
+    ≥ K·V with bitwise-identical results across rungs.
     """
+    if backend in SWEEP_BACKENDS:
+        if x_t is None or r_ids is None or v_max is None:
+            raise ValueError(
+                f"backend={backend!r} takes the slab operand form: pass "
+                "x_t=, r_ids=, v_max= (and packed=None)")
+        if backend == "sweep":
+            from repro.kernels.contingency.ops import sweep_theta
+
+            w_ = jnp.where(valid, w, 0).astype(jnp.float32)
+            return sweep_theta(
+                x_t, r_ids, d, w_, n, delta=delta, v_max=v_max,
+                n_bins=n_bins, n_dec=m, interpret=interpret)
+        return _theta_sweep_xla(
+            delta, x_t, r_ids, d, w, valid, n, v_max=v_max, n_bins=n_bins,
+            m=m)
     if backend == "fused":
         from repro.kernels.contingency.ops import fused_theta
 
@@ -218,7 +370,8 @@ def candidate_theta(
     if backend not in ("segment", "onehot", "pallas"):
         raise ValueError(
             f"unknown Θ backend: {backend!r} "
-            "(one of: segment, onehot, pallas, fused, fused_xla)")
+            "(one of: segment, onehot, pallas, fused, fused_xla, sweep, "
+            "sweep_xla)")
     cont = candidate_contingency(
         packed, d, w, valid, n_bins=n_bins, m=m, backend=backend,
         interpret=interpret)

@@ -43,13 +43,22 @@ from .granularity import (
     row_fingerprints,
     with_capacity,
 )
-from .plan import candidate_theta, contingency_from_ids, ids_by_sort, subset_ids
+from .plan import (
+    SWEEP_BACKENDS,
+    candidate_theta,
+    contingency_from_ids,
+    ids_by_sort,
+    ladder_rungs,
+    rung_for,
+    subset_ids,
+)
 
 __all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce",
            "raw_granularity", "resolve_granularity"]
 
 _MODES = ("incremental", "spark")
-_BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla")
+_BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla", "sweep",
+             "sweep_xla")
 _ENGINES = ("auto", "host", "device")
 
 
@@ -135,6 +144,22 @@ def _eval_chunk_incremental(delta, backend, n_bins, m, v_max):
         packed = pack_ids(r_ids[None, :], x_cand, v_max)    # [nc, G]
         return candidate_theta(
             delta, packed, d, w, active, n, n_bins=n_bins, m=m, backend=backend
+        ) + pr_correction
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _eval_chunk_sweep(delta, backend, n_bins, m, v_max):
+    """Sweep backends (DESIGN.md §5.3): read-once slab form — candidate rows
+    sliced from the pre-transposed ``x_t [A, cap]``, pack fused downstream."""
+
+    @jax.jit
+    def run(r_ids, cand_cols, x_t, d, w, active, n, pr_correction):
+        x_cand = jnp.take(x_t, cand_cols, axis=0)          # [nc, cap]
+        return candidate_theta(
+            delta, None, d, w, active, n, n_bins=n_bins, m=m,
+            backend=backend, x_t=x_cand, r_ids=r_ids, v_max=v_max
         ) + pr_correction
 
     return run
@@ -331,7 +356,8 @@ def plar_reduce(
     tie_tol: float = 1e-5,
     max_features: Optional[int] = None,
     mode: str = "incremental",          # "incremental" (optimized) | "spark" (paper-faithful)
-    backend: str = "segment",           # Θ backend: segment|onehot|pallas|fused|fused_xla
+    backend: str = "segment",           # Θ backend: segment|onehot|pallas|fused|fused_xla|sweep|sweep_xla
+    ladder: bool = False,                # K-adaptive bin ladder (DESIGN.md §5.3)
     mp_chunk: int = 64,                  # model-parallelism level (paper Table 12 knob)
     grc_init: bool = True,               # paper Fig. 9 knob
     shrink: bool = False,                # FSPA universe shrinking
@@ -380,7 +406,8 @@ def plar_reduce(
         max_sel = int(max_features) if max_features is not None else A
         runner = make_engine_run(
             delta, mode, backend, A, cap, m, gran.v_max, float(tol),
-            float(tie_tol), bool(shrink), max_sel, int(mp_chunk))
+            float(tie_tol), bool(shrink), max_sel, int(mp_chunk),
+            bool(ladder))
         reduct, theta_hist, iterations, ev, per_iter = run_engine(
             runner, cap, A, gran.valid, gran.x, gran.d, gran.w, n,
             theta_full, core)
@@ -408,12 +435,33 @@ def plar_reduce(
 
     v = gran.v_max
 
-    # Evaluation and advance both use the engine's static bin bound cap·V:
-    # one compile for the whole run (no power-of-two recompile ladder) and Θ
-    # summed over the same padded rows as engine="device" — zero rows add
-    # exactly 0 in f32, but reduction *grouping* depends on length, so equal
-    # lengths ⇒ equal bits (candidate thetas AND recorded histories).
+    # The advance (and, ladder off, the evaluation) uses the engine's static
+    # bin bound cap·V: one compile for the whole run (no power-of-two
+    # recompile ladder) and Θ summed over the same padded rows as
+    # engine="device" — zero rows add exactly 0 in f32, but reduction
+    # *grouping* depends on length, so equal lengths ⇒ equal bits (candidate
+    # thetas AND recorded histories).  The §5.3 ladder shrinks only the
+    # *candidate evaluation* bins; the advance keeps the full bound, which is
+    # what keeps theta histories byte-identical across every (backend,
+    # ladder) combination.
     adv = _make_advance(cap * v, v, m, delta)
+
+    # K-adaptive candidate-eval bins (ladder on): the host twin of the
+    # engine's lax.switch — same static rung set, chosen per iteration from
+    # the synced k, one (lru-cached) compile per rung actually visited.
+    rungs = ladder_rungs(cap * v)
+
+    def _eval_bins_for(k_):
+        if ladder:
+            return rung_for(k_, v, rungs)
+        # device-capable backends pin the full static bound for bit parity
+        # with engine="device"; host-only Pallas backends keep the cheaper
+        # pow2 ladder (no device twin to match)
+        return cap * v if backend in DEVICE_BACKENDS else _next_pow2(max(k_, 1)) * v
+
+    # read-once candidate slab for the sweep backends, hoisted out of the
+    # loop (the device engine hoists the same transpose before its while_loop)
+    x_t_full = jnp.swapaxes(gran.x, 0, 1) if backend in SWEEP_BACKENDS else None
 
     # The stop threshold mirrors the device cond's f32 arithmetic exactly, so
     # both engines run the same number of iterations even when theta_r lands
@@ -465,19 +513,23 @@ def plar_reduce(
                 )
                 thetas[s : s + len(cols)] = vals[: len(cols)]
         else:
-            # Device-capable backends evaluate at the engine's static bin
-            # bound so candidate thetas are bit-identical to engine="device";
-            # the host-only Pallas backends have no device twin to match and
-            # keep the cheaper bins_for(k) pow2 ladder.
-            eval_bins = (cap * v if backend in DEVICE_BACKENDS
-                         else _next_pow2(max(k, 1)) * v)
-            runner = _eval_chunk_incremental(delta, backend, eval_bins, m, v)
+            # Candidate-eval bin bound: full static cap·V for device-capable
+            # backends (bit parity with engine="device"), a §5.3 rung when
+            # the ladder is on (matching the device engine's switch), pow2
+            # for the host-only Pallas backends.
+            eval_bins = _eval_bins_for(k)
+            if backend in SWEEP_BACKENDS:
+                runner = _eval_chunk_sweep(delta, backend, eval_bins, m, v)
+                table = x_t_full
+            else:
+                runner = _eval_chunk_incremental(delta, backend, eval_bins, m, v)
+                table = gran.x
             for s in range(0, len(remaining), nc):
                 cols = np.asarray(remaining[s : s + nc], np.int32)
                 pad = nc - len(cols)
                 padded = np.concatenate([cols, np.full((pad,), cols[-1], np.int32)])
                 vals = np.asarray(
-                    runner(r_ids, jnp.asarray(padded), gran.x, gran.d, gran.w, active, n, pr_correction)
+                    runner(r_ids, jnp.asarray(padded), table, gran.d, gran.w, active, n, pr_correction)
                 )
                 thetas[s : s + len(cols)] = vals[: len(cols)]
         n_evals += len(remaining)

@@ -1,12 +1,14 @@
 from .autotune import autotune_block_sizes, select_block_sizes
-from .ops import contingency, fused_theta, theta_scale
-from .ref import contingency_ref, fused_theta_ref
+from .ops import contingency, fused_theta, sweep_theta, theta_scale
+from .ref import contingency_ref, fused_theta_ref, sweep_theta_ref
 
 __all__ = [
     "contingency",
     "contingency_ref",
     "fused_theta",
     "fused_theta_ref",
+    "sweep_theta",
+    "sweep_theta_ref",
     "theta_scale",
     "select_block_sizes",
     "autotune_block_sizes",

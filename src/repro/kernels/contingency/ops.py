@@ -20,6 +20,7 @@ from repro.core.measures import theta_scale  # noqa: F401  (public re-export)
 from .autotune import select_block_sizes
 from .fused import fused_theta_pallas
 from .kernel import DEFAULT_BG, DEFAULT_BK, contingency_pallas
+from .sweep import DEFAULT_BC, sweep_theta_pallas
 
 LANE = 128
 
@@ -87,4 +88,37 @@ def fused_theta(
     raw = fused_theta_pallas(
         packed, wd, n_bins=n_bins, delta=delta, bk=bk, bg=bg, interpret=interpret
     )
+    return theta_scale(delta, raw, n)
+
+
+@partial(jax.jit, static_argnames=("delta", "v_max", "n_bins", "n_dec", "bc",
+                                   "bk", "bg", "interpret"))
+def sweep_theta(
+    x_t: jnp.ndarray,      # [nc, G] int32 — pre-transposed candidate slab
+    r_ids: jnp.ndarray,    # [G]     int32 — shared class ids of U/R
+    d: jnp.ndarray,        # [G]     int32
+    w: jnp.ndarray,        # [G]   float32 (already masked: 0 on padding slots)
+    n,                     # |U| scalar — normalization only, never enters the kernel
+    *,
+    delta: str,
+    v_max: int,
+    n_bins: int,
+    n_dec: int,
+    bc: int = DEFAULT_BC,
+    bk: Optional[int] = None,
+    bg: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Θ(D|R∪{a})[c] from the read-once slab operands (DESIGN.md §5.3).
+
+    Semantics: ``fused_theta(r_ids[None]·V + x_t, ...)`` with the id-packing
+    fused into the kernel and each granule tile loaded once per candidate
+    *block* — ``packed [nc, G]`` never reaches HBM.  ``n_bins`` may be any
+    §5.3 ladder rung ≥ K·V.
+    """
+    wd, m_pad = _lane_padded_wd(w, d, n_dec)
+    bk, bg = _resolve_blocks(n_bins, x_t.shape[1], m_pad, bk, bg)
+    raw = sweep_theta_pallas(
+        x_t, r_ids, wd, v_max=v_max, n_bins=n_bins, delta=delta, bc=bc,
+        bk=bk, bg=bg, interpret=interpret)
     return theta_scale(delta, raw, n)

@@ -45,3 +45,26 @@ def fused_theta_ref(
 
     cont = contingency_ref(packed, d, w, n_bins=n_bins, n_dec=n_dec)
     return measures.theta_rows(delta, cont, n).sum(axis=-1)
+
+
+def sweep_theta_ref(
+    x_t: jnp.ndarray,      # [nc, G] int32 — pre-transposed candidate slab
+    r_ids: jnp.ndarray,    # [G]     int32 — shared class ids of U/R
+    d: jnp.ndarray,        # [G]     int32
+    w: jnp.ndarray,        # [G]   float32 (0 for padding granules)
+    n,                     # |U| scalar
+    *,
+    delta: str,
+    v_max: int,
+    n_bins: int,
+    n_dec: int,
+) -> jnp.ndarray:
+    """Oracle for the multi-candidate sweep kernel (DESIGN.md §5.3).
+
+    Defining semantics: pack explicitly (``p = r·V + v``), then the fused-Θ
+    oracle — the sweep kernel must equal this for every ladder rung
+    ``n_bins ≥ K·V``.
+    """
+    packed = r_ids[None, :] * v_max + x_t
+    return fused_theta_ref(
+        packed, d, w, n, delta=delta, n_bins=n_bins, n_dec=n_dec)

@@ -35,8 +35,15 @@ def main():
     ap.add_argument("--max-features", type=int, default=None)
     ap.add_argument("--mode", default="incremental", choices=["incremental", "spark"])
     ap.add_argument("--backend", default="segment",
-                    choices=["segment", "onehot", "pallas", "fused", "fused_xla"],
-                    help="Θ evaluation backend (fused = PR-1 Pallas kernel)")
+                    choices=["segment", "onehot", "pallas", "fused",
+                             "fused_xla", "sweep", "sweep_xla"],
+                    help="Θ evaluation backend (fused = PR-1 Pallas kernel; "
+                         "sweep/sweep_xla = PR-4 read-once candidate sweep)")
+    ap.add_argument("--bin-ladder", default="off", choices=["on", "off"],
+                    help="K-adaptive bin ladder for the candidate sweep "
+                         "(DESIGN.md §5.3): early iterations pay "
+                         "K-proportional work, zero recompiles on the "
+                         "device engine")
     ap.add_argument("--engine", default="auto", choices=["auto", "host", "device"],
                     help="greedy loop: device-resident while_loop or legacy host loop")
     ap.add_argument("--shrink", action="store_true",
@@ -78,12 +85,13 @@ def main():
         ).table()
         table_shape = list(x.shape)
 
+    ladder = args.bin_ladder == "on"
     if args.distributed:
-        # the mesh driver has no mode/backend/shrink knobs — refuse rather
-        # than silently ignoring them
+        # the mesh driver has no mode/shrink knobs and only the mesh-capable
+        # Θ backends — refuse rather than silently ignoring them
         dropped = [name for name, off_default in [
             ("--mode", args.mode != "incremental"),
-            ("--backend", args.backend != "segment"),
+            ("--backend", args.backend not in ("segment", "sweep_xla")),
             ("--shrink", args.shrink),
             ("--mp-chunk", args.mp_chunk != 64),
         ] if off_default]
@@ -100,14 +108,15 @@ def main():
                                     delta=args.delta,
                                     max_features=args.max_features,
                                     collective=args.collective,
+                                    backend=args.backend, ladder=ladder,
                                     engine=args.engine)
     else:
         from repro.core import plar_reduce
 
         r = plar_reduce(x, d, source=source, chunk_rows=args.chunk_rows,
                         delta=args.delta, mode=args.mode,
-                        backend=args.backend, engine=args.engine,
-                        shrink=args.shrink,
+                        backend=args.backend, ladder=ladder,
+                        engine=args.engine, shrink=args.shrink,
                         mp_chunk=args.mp_chunk, grc_init=not args.no_grc,
                         max_features=args.max_features)
 

@@ -1,0 +1,243 @@
+"""K-adaptive bin ladder + multi-candidate sweep backend (DESIGN.md §5.3).
+
+The contract of PR 4: the eval sweep may shrink its bin work to the live
+K·V range (ladder) and switch to the read-once slab backend (sweep /
+sweep_xla) with *byte-exact* results — same reduct, same core, same
+theta_history floats — against the PR-2 device engine, across all four
+measures, with shrink, in spark mode, and under max_features.  Plus the perf
+contract: the ladder adds zero traces to the single while_loop compile (all
+rungs live inside one lax.switch), and the 1×1 mesh engine still equals the
+single-process engine.
+
+Kernel-level: the sweep Pallas kernel (interpret mode) against its pure-jnp
+oracle, and the bitwise rung-invariance lemma the ladder's parity argument
+rests on (trailing tiles beyond K·V contribute exact f32 zeros in tile
+order).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import plar_reduce
+from repro.core.plan import LADDER_TILE, candidate_theta, ladder_rungs
+
+DELTAS = ["PR", "SCE", "LCE", "CCE"]
+
+
+def _table(rng, n, a, vmax=4, m=2, redundancy=0.5):
+    x = rng.integers(0, vmax, size=(n, a)).astype(np.int32)
+    for j in range(a):
+        if rng.random() < redundancy and j > 0:
+            x[:, j] = x[:, rng.integers(0, j)]
+    d = rng.integers(0, m, size=(n,)).astype(np.int32)
+    return x, d
+
+
+def _assert_same(ra, rb):
+    assert ra.reduct == rb.reduct
+    assert ra.core == rb.core
+    assert ra.theta_history == rb.theta_history  # bit-identical floats
+    assert ra.iterations == rb.iterations
+
+
+# ---------------------------------------------------------------------------
+# ladder bucket math
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_rungs_properties():
+    for n_bins in [100, 256, 300, 768, 1024, 4096, 6144]:
+        rungs = ladder_rungs(n_bins)
+        assert rungs[-1] == n_bins                  # top rung = exact bound
+        assert list(rungs) == sorted(set(rungs))    # ascending, distinct
+        for r in rungs[:-1]:
+            # below the top: pow2 multiples of the 256-bin θ tile — divisible
+            # by any pow2 data-shard count ≤ 256 (reduce_scatter tiling)
+            assert r % LADDER_TILE == 0 and (r & (r - 1)) == 0
+    assert ladder_rungs(100) == (100,)              # tiny tables: one rung
+    assert ladder_rungs(4096) == (256, 512, 1024, 2048, 4096)
+
+
+def test_sweep_xla_bitwise_invariant_across_rungs():
+    """The ladder's parity lemma: sweep_xla thetas are bit-identical at every
+    rung ≥ K·V — dropped trailing tiles are exact f32 zeros in tile order."""
+    rng = np.random.default_rng(3)
+    G, nc, vmax, m, K = 300, 7, 4, 3, 37
+    x_t = jnp.asarray(rng.integers(0, vmax, (nc, G)), jnp.int32)
+    r = jnp.asarray(rng.integers(0, K, (G,)), jnp.int32)
+    d = jnp.asarray(rng.integers(0, m, (G,)), jnp.int32)
+    w = jnp.asarray(rng.integers(1, 5, (G,)), jnp.int32)
+    valid = jnp.asarray(rng.random(G) < 0.9)
+    n = jnp.float32(float(np.where(np.asarray(valid), np.asarray(w), 0).sum()))
+    for delta in DELTAS:
+        outs = [
+            np.asarray(candidate_theta(
+                delta, None, d, w, valid, n, n_bins=nb, m=m,
+                backend="sweep_xla", x_t=x_t, r_ids=r, v_max=vmax))
+            for nb in (256, 512, 1024)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0])
+
+
+def test_sweep_kernel_matches_oracle():
+    """Pallas sweep kernel (interpret) == pure-jnp oracle, incl. candidate
+    and granule padding, pure classes, and a non-tile-multiple bin count."""
+    from repro.kernels.contingency import sweep_theta_ref
+    from repro.kernels.contingency.ops import sweep_theta
+
+    rng = np.random.default_rng(11)
+    for nc, G, vmax, m, K, n_bins in [(5, 130, 3, 2, 20, 60),
+                                      (9, 300, 4, 3, 50, 512)]:
+        x_t = jnp.asarray(rng.integers(0, vmax, (nc, G)), jnp.int32)
+        r = jnp.asarray(rng.integers(0, K, (G,)), jnp.int32)
+        d = jnp.asarray(rng.integers(0, m, (G,)), jnp.int32)
+        w_ = jnp.asarray(rng.integers(0, 4, (G,)), jnp.float32)  # 0-weight slots
+        n = jnp.float32(float(np.asarray(w_).sum()))
+        for delta in DELTAS:
+            got = np.asarray(sweep_theta(
+                x_t, r, d, w_, n, delta=delta, v_max=vmax, n_bins=n_bins,
+                n_dec=m))
+            want = np.asarray(sweep_theta_ref(
+                x_t, r, d, w_, n, delta=delta, v_max=vmax, n_bins=n_bins,
+                n_dec=m))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity matrix (the §5.3 contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_ladder_and_sweep_parity_all_measures(delta):
+    """(backend, ladder) grid == the PR-2 device engine, byte-exact."""
+    rng = np.random.default_rng(42)
+    x, d = _table(rng, 400, 8)
+    base = plar_reduce(x, d, delta=delta, engine="device")  # segment, no ladder
+    for backend, ladder in [("segment", True), ("sweep_xla", False),
+                            ("sweep_xla", True)]:
+        r = plar_reduce(x, d, delta=delta, engine="device", backend=backend,
+                        ladder=ladder)
+        _assert_same(base, r)
+    # the Pallas sweep kernel joins the same matrix from the host loop
+    r = plar_reduce(x, d, delta=delta, backend="sweep", ladder=True)
+    _assert_same(base, r)
+
+
+@pytest.mark.parametrize("delta", DELTAS)
+def test_ladder_sweep_parity_shrink(delta):
+    """FSPA shrinking (active mask + PR scalar) under ladder + sweep."""
+    rng = np.random.default_rng(7)
+    x, d = _table(rng, 300, 8)
+    base = plar_reduce(x, d, delta=delta, shrink=True, engine="device")
+    r = plar_reduce(x, d, delta=delta, shrink=True, engine="device",
+                    backend="sweep_xla", ladder=True)
+    _assert_same(base, r)
+
+
+def test_ladder_parity_spark_and_max_features():
+    rng = np.random.default_rng(13)
+    x, d = _table(rng, 250, 8)
+    # spark mode: the ladder is inert (sort-ranked ids, not K·V-packed) but
+    # must pass through cleanly with identical results
+    bs = plar_reduce(x, d, delta="PR", mode="spark", engine="device")
+    rs = plar_reduce(x, d, delta="PR", mode="spark", engine="device",
+                     ladder=True)
+    _assert_same(bs, rs)
+    # max_features caps the same iteration on every config
+    bm = plar_reduce(x, d, delta="SCE", engine="device", max_features=3,
+                     compute_core=False)
+    rm = plar_reduce(x, d, delta="SCE", engine="device", max_features=3,
+                     compute_core=False, backend="sweep_xla", ladder=True)
+    _assert_same(bm, rm)
+    assert len(rm.reduct) <= 3
+
+
+def test_host_engine_ladder_matches_device_ladder():
+    """The host loop's rung-snapped eval == the device switch, byte-exact
+    (same rung set, same candidate_theta function at each K)."""
+    rng = np.random.default_rng(17)
+    x, d = _table(rng, 350, 8)
+    for backend in ["segment", "sweep_xla"]:
+        rh = plar_reduce(x, d, delta="SCE", engine="host", backend=backend,
+                         ladder=True)
+        rd = plar_reduce(x, d, delta="SCE", engine="device", backend=backend,
+                         ladder=True)
+        _assert_same(rh, rd)
+
+
+def test_ladder_single_compile():
+    """All ladder rungs live inside the ONE while_loop trace (lax.switch):
+    a full run adds exactly one trace, a second same-shape run adds zero —
+    the 'never recompiles mid-run' proof."""
+    from repro.core.engine import make_engine_run
+
+    rng = np.random.default_rng(23)
+    n, a, vmax, m = 400, 8, 4, 2
+    x1, d1 = _table(rng, n, a, vmax=vmax, m=m)
+    x2, d2 = _table(rng, n, a, vmax=vmax, m=m)
+    for x, d in ((x1, d1), (x2, d2)):
+        x[0, :] = vmax - 1
+        d[0] = m - 1
+    # grc_init=False ⇒ capacity == n exactly: n_bins = 1600, a 4-rung ladder
+    assert len(ladder_rungs(n * vmax)) == 4
+    plar_reduce(x1, d1, delta="SCE", engine="device", grc_init=False,
+                backend="sweep_xla", ladder=True)
+    runner = make_engine_run(
+        "SCE", "incremental", "sweep_xla", a, n, m, vmax, 1e-6, 1e-5, False,
+        a, 64, True)
+    assert runner._cache_size() == 1          # one trace, every rung inside
+    plar_reduce(x2, d2, delta="SCE", engine="device", grc_init=False,
+                backend="sweep_xla", ladder=True)
+    assert runner._cache_size() == 1          # warm rerun: zero new traces
+
+
+@pytest.mark.parametrize("delta", ["PR", "LCE"])
+def test_ladder_sweep_1x1_mesh_matches_single_process(delta):
+    import jax
+
+    from repro.core.distributed import plar_reduce_distributed
+    from repro.distributed.api import make_mesh
+
+    rng = np.random.default_rng(29)
+    x, d = _table(rng, 300, 8)
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     devices=np.array(jax.devices()[:1]))
+    r_mesh = plar_reduce_distributed(x, d, mesh, delta=delta, engine="device",
+                                     backend="sweep_xla", ladder=True)
+    r_sp = plar_reduce(x, d, delta=delta, engine="device",
+                       backend="sweep_xla", ladder=True)
+    assert r_mesh.reduct == r_sp.reduct
+    assert r_mesh.core == r_sp.core
+    # mesh capacity padding differs from the single-process pow2 shrink, so
+    # f32 grouping may differ in the last ulp — values agree
+    np.testing.assert_allclose(
+        r_mesh.theta_history, r_sp.theta_history, rtol=1e-6, atol=1e-7)
+
+
+def test_sweep_validation_errors():
+    import jax
+
+    from repro.core.distributed import plar_reduce_distributed
+    from repro.distributed.api import make_mesh
+
+    rng = np.random.default_rng(31)
+    x, d = _table(rng, 80, 5)
+    # Pallas sweep kernel cannot run inside the while_loop body
+    with pytest.raises(ValueError, match="engine='device'"):
+        plar_reduce(x, d, backend="sweep", engine="device")
+    # slab operand form is mandatory for the sweep backends
+    with pytest.raises(ValueError, match="slab"):
+        candidate_theta("PR", jnp.zeros((2, 8), jnp.int32),
+                        jnp.zeros((8,), jnp.int32), jnp.ones((8,), jnp.int32),
+                        jnp.ones((8,), bool), jnp.float32(8), n_bins=16, m=2,
+                        backend="sweep_xla")
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     devices=np.array(jax.devices()[:1]))
+    with pytest.raises(ValueError, match="mesh Θ backend"):
+        plar_reduce_distributed(x, d, mesh, backend="onehot")
+    with pytest.raises(ValueError, match="fused"):
+        plar_reduce_distributed(x, d, mesh, collective="fused",
+                                backend="sweep_xla")
