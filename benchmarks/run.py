@@ -34,6 +34,7 @@ PRESETS = {
     "kernels": ["contingency_backends", "fused_theta_vs_unfused"],
     "ingest": ["ingest_stream_vs_monolithic"],
     "sweep": ["sweep_ladder_speedup"],
+    "service": ["service_incremental_vs_recompute"],
 }
 
 
@@ -42,6 +43,7 @@ def main() -> None:
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
+    from .service_bench import ALL_SERVICE_BENCHES
 
     # accept both "--flag VALUE" and "--flag=VALUE"
     argv = []
@@ -69,7 +71,7 @@ def main() -> None:
         tag = tag or preset
     wanted = argv or None
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
-            **ALL_INGEST_BENCHES}
+            **ALL_INGEST_BENCHES, **ALL_SERVICE_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:

@@ -26,6 +26,11 @@ This module keeps the *whole* reduction on device:
   rule) as a single ``lax.while_loop``.  Core attributes are *forced*
   selections for the first ``core_count`` iterations of the same loop, so
   the core-fold/greedy/stopping/result-assembly logic exists exactly once.
+* ``init_state_from_reduct`` / ``engine_resume`` — the warm-start seam for
+  the online reduct service (DESIGN.md §3.7): seeding folds a previously
+  selected prefix through the same compiled loop with the greedy phase
+  disabled (``theta_full = +inf``), resuming continues greedy from the
+  seeded state.  A warm reduction is two dispatches of the one trace.
 
 The same ``cond``/``body`` serve the mesh driver: collectives are injected
 via a tiny adapter (:class:`_LocalColl` is the identity; :class:`_MeshColl`
@@ -74,6 +79,8 @@ from .plan import (
 __all__ = [
     "SelectionState",
     "init_state",
+    "init_state_from_reduct",
+    "engine_resume",
     "make_engine_step",
     "make_engine_run",
     "unpack_result",
@@ -475,11 +482,14 @@ def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
     Exposed for inspection/benchmarks; ``make_engine_run`` inlines the same
     body into its while_loop, so a full reduction costs one compile, not two.
     """
-    # thin wrapper so defaulted and explicit trailing args share one lru
-    # entry (a positional call and a defaulted call must return the SAME
-    # cached jit function — the single-compile contract)
-    return _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max,
-                             tol, tie_tol, shrink, max_sel, mp_chunk, ladder)
+    # thin wrapper so defaulted, keyword, and explicit positional calls all
+    # share one lru entry, and numpy scalar arguments (np.int32 dims from a
+    # Granularity, np.bool_ flags) key identically to their Python values —
+    # the single-compile contract (asserted by test_engine_factory_cache_key)
+    return _make_engine_step(str(delta), str(mode), str(backend),
+                             int(n_attrs), int(cap), int(m), int(v_max),
+                             float(tol), float(tie_tol), bool(shrink),
+                             int(max_sel), int(mp_chunk), bool(ladder))
 
 
 @lru_cache(maxsize=None)
@@ -506,8 +516,12 @@ def make_engine_run(delta: str, mode: str, backend: str, n_attrs: int,
                     shrink: bool, max_sel: int, mp_chunk: int = 64,
                     ladder: bool = False):
     """The full reduction as one ``lax.while_loop`` (single-process)."""
-    return _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max,
-                            tol, tie_tol, shrink, max_sel, mp_chunk, ladder)
+    # same key normalization as make_engine_step (one lru entry per logical
+    # config regardless of call style or numpy scalar types)
+    return _make_engine_run(str(delta), str(mode), str(backend),
+                            int(n_attrs), int(cap), int(m), int(v_max),
+                            float(tol), float(tie_tol), bool(shrink),
+                            int(max_sel), int(mp_chunk), bool(ladder))
 
 
 @lru_cache(maxsize=None)
@@ -532,28 +546,81 @@ def _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max, tol,
     return run
 
 
+def _forced_attrs(n_attrs: int, forced) -> jnp.ndarray:
+    """The padded ``[max(A,1)]`` forced-selection buffer both entry points
+    feed the loop (core attributes and warm-start prefixes alike)."""
+    arr = np.zeros((max(n_attrs, 1),), np.int32)
+    arr[: len(forced)] = forced
+    return jnp.asarray(arr)
+
+
+def init_state_from_reduct(runner, cap: int, n_attrs: int, valid, x, d, w, n,
+                           prefix) -> SelectionState:
+    """Seed a :class:`SelectionState` by folding ``prefix`` into fresh state.
+
+    The online-service repair primitive (DESIGN.md §3.7): runs the *same*
+    compiled while_loop as the full reduction with the greedy phase disabled
+    (``theta_full = +inf`` makes the greedy condition vacuously false), so
+    the loop executes exactly ``len(prefix)`` forced folds and exits.  The
+    returned state carries the refined ``r_ids``/``k``, the recomputed
+    Θ-history prefix (the *validation* signal — each entry is Θ(D|prefix[:i])
+    on the current granularity), and ``remaining`` with the prefix cleared —
+    ready for :func:`engine_resume`.  ``theta_full`` is a traced operand, so
+    seeding adds zero compiles beyond the runner's single trace.
+    """
+    st = init_state(cap, n_attrs, valid)
+    return runner(st, x, d, w, n, jnp.float32(jnp.inf),
+                  _forced_attrs(n_attrs, prefix), jnp.int32(len(prefix)))
+
+
+def engine_resume(runner, st: SelectionState, x, d, w, n, theta_full):
+    """Resume the greedy loop from a seeded state (no forced selections).
+
+    The warm-start twin of a cold ``runner`` call: with ``core_count = 0``
+    the loop goes straight to greedy iterations from wherever ``st`` left
+    off.  Same compiled executable as the cold run and the seed — a warm
+    reduction is two dispatches of one trace.
+    """
+    n_attrs = st.remaining.shape[0]
+    return runner(st, x, d, w, n, jnp.float32(theta_full),
+                  _forced_attrs(n_attrs, ()), jnp.int32(0))
+
+
 def run_engine(runner, cap: int, n_attrs: int, valid, x, d, w, n,
-               theta_full: float, core):
+               theta_full: float, core, warm_start=None):
     """Init-state → jitted loop → unpack: the device path shared verbatim by
     both drivers (``plar_reduce`` and ``plar_reduce_distributed``).
 
+    With ``warm_start`` (a previously selected prefix; ``core`` must be
+    empty) the loop is seeded by :func:`init_state_from_reduct` and resumed
+    by :func:`engine_resume` — two dispatches of the same single compile,
+    re-folding the prefix as forced selections and running greedy only for
+    the remainder.
+
     Returns ``(reduct, theta_history, iterations, n_evals, per_iteration_s)``
     where ``per_iteration_s`` holds one entry per *executed loop body* —
-    ``len(reduct)`` entries, core folds included — each the loop average
+    ``len(reduct)`` entries, core/warm folds included — each the loop average
     (the engine is a single dispatch, so individual bodies cannot be timed;
     the list sums to the measured loop wall-clock exactly).
     """
     import time
 
-    core_arr = np.zeros((max(n_attrs, 1),), np.int32)
-    core_arr[: len(core)] = core
-    st = init_state(cap, n_attrs, valid)
     t_loop = time.perf_counter()
-    fin = jax.block_until_ready(
-        runner(st, x, d, w, n, jnp.float32(theta_full),
-               jnp.asarray(core_arr), jnp.int32(len(core))))
+    if warm_start is not None:
+        assert not core, "warm_start replaces the core prefix"
+        forced = list(warm_start)
+        st = init_state_from_reduct(
+            runner, cap, n_attrs, valid, x, d, w, n, forced)
+        fin = jax.block_until_ready(
+            engine_resume(runner, st, x, d, w, n, theta_full))
+    else:
+        forced = list(core)
+        st = init_state(cap, n_attrs, valid)
+        fin = jax.block_until_ready(
+            runner(st, x, d, w, n, jnp.float32(theta_full),
+                   _forced_attrs(n_attrs, forced), jnp.int32(len(forced))))
     loop_s = time.perf_counter() - t_loop
-    reduct, hist, iters, n_evals = unpack_result(fin, len(core))
+    reduct, hist, iters, n_evals = unpack_result(fin, len(forced))
     n_bodies = len(reduct)
     per_body = loop_s / n_bodies if n_bodies else 0.0
     return reduct, hist, iters, n_evals, [per_body] * n_bodies

@@ -364,8 +364,27 @@ def plar_reduce(
     exact: bool = True,
     compute_core: bool = True,
     engine: str = "auto",                # "device" while_loop | "host" legacy loop
+    warm_start: Optional[Sequence[int]] = None,  # resume greedy from this prefix
 ) -> ReductionResult:
-    """PLAR (Algorithm 2) on one process.  See module docstring for modes."""
+    """PLAR (Algorithm 2) on one process.  See module docstring for modes.
+
+    ``warm_start`` seeds the selection with a previously chosen prefix (the
+    online-service repair path, DESIGN.md §3.7): the prefix attributes are
+    folded as forced selections — re-recording their Θ values on *this*
+    granularity — and the greedy loop resumes from there.  It replaces the
+    core computation (the prefix stands in for the core, so ``core`` comes
+    back empty) and, on the device engine, runs as a seed + resume pair of
+    dispatches of the same single compile
+    (:func:`~repro.core.engine.init_state_from_reduct` /
+    :func:`~repro.core.engine.engine_resume`).  For a prefix the cold run
+    would itself have selected, the result is byte-identical to the cold run
+    (asserted by tests/test_engine.py::test_warm_start_parity).
+
+    Like core attributes, the forced prefix folds unconditionally:
+    ``max_features`` caps only further *greedy* additions (so
+    ``warm_start=prefix, max_features=0`` folds the prefix and adds
+    nothing — a pure re-evaluation of the prefix's Θ trajectory).
+    """
     t0 = time.perf_counter()
     if mode not in _MODES:
         raise ValueError(
@@ -384,19 +403,30 @@ def plar_reduce(
     n = gran.n_total
     n_evals = 0
 
+    warm: Optional[List[int]] = None
+    if warm_start is not None:
+        warm = [int(a) for a in warm_start]
+        if len(set(warm)) != len(warm):
+            raise ValueError(f"warm_start contains duplicates: {warm}")
+        bad = [a for a in warm if not 0 <= a < A]
+        if bad:
+            raise ValueError(
+                f"warm_start attributes {bad} out of range [0, {A})")
+
     # Θ(D|C): stopping target.
     all_cols = jnp.arange(A, dtype=jnp.int32)
     ids_c, _k = subset_ids(gran, all_cols, exact=exact)
     cont_c = contingency_from_ids(ids_c, gran.d, gran.w, gran.valid, n_bins=cap, m=m)
     theta_full = float(measures.evaluate(delta, cont_c, n))
 
-    # --- core ---
+    # --- core (skipped under warm_start: the prefix stands in for it) ---
     core: List[int] = []
-    if compute_core:
+    if compute_core and warm is None:
         inner = _core_inner_thetas(gran, delta, exact=exact)
         sig = inner - theta_full  # Θ(D|C\{a}) - Θ(D|C)
         core = [int(a) for a in range(A) if sig[a] > eps + tie_tol]
         n_evals += A
+    forced = core if warm is None else warm
 
     if engine == "device":
         # Device-resident engine: core folding + greedy loop + stopping rule
@@ -410,7 +440,7 @@ def plar_reduce(
             bool(ladder))
         reduct, theta_hist, iterations, ev, per_iter = run_engine(
             runner, cap, A, gran.valid, gran.x, gran.d, gran.w, n,
-            theta_full, core)
+            theta_full, core, warm_start=warm)
         return ReductionResult(
             reduct=reduct,
             core=core,
@@ -475,8 +505,8 @@ def plar_reduce(
             pr_correction = pr_correction - np.float32(shed / jnp.float32(n))
         active = active & ~g_pure
 
-    # fold core attributes into the state
-    for a in core:
+    # fold the forced prefix (core attributes, or the warm-start prefix)
+    for a in forced:
         r_ids, k_new, theta_r, g_pure = adv(r_ids, gran.x[:, a], gran.d, gran.w, active, n)
         k = int(k_new)
         reduct.append(a)

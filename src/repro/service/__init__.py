@@ -1,0 +1,23 @@
+"""Online attribute-reduction service (DESIGN.md §3.7).
+
+Turns the batch reproduction into a stateful subsystem: a device-resident
+granularity absorbs row-batch deltas through the §3.6 monoid merge, and
+reducts are repaired by warm-starting the §3.5 selection engine from the
+previous result instead of recomputing from an empty reduct.
+"""
+from .server import ReduceRequest, ReductServer
+from .state import (
+    DatasetHandle,
+    granularity_fingerprint,
+    repair_reduce,
+    valid_prefix_len,
+)
+
+__all__ = [
+    "DatasetHandle",
+    "ReduceRequest",
+    "ReductServer",
+    "granularity_fingerprint",
+    "repair_reduce",
+    "valid_prefix_len",
+]

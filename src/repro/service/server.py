@@ -1,0 +1,217 @@
+"""Async online reduct server: queue + worker, coalesced updates, result cache.
+
+The serving layer of DESIGN.md §3.7, shaped like ``serving/engine.py``'s
+Request pattern: requests enter an asyncio queue, one worker drains it, and
+the expensive JAX work runs in a thread so the event loop stays responsive.
+
+Operations:
+
+* ``submit(name, ...)``  — create a :class:`DatasetHandle` (initial rows,
+  a GranuleSource, or a prebuilt Granularity);
+* ``update(name, x, d)`` — enqueue a row batch.  Updates are *lazy*: they
+  buffer per dataset and are **coalesced into one monoid merge** when the
+  next query for that dataset is served — k buffered batches cost one
+  concat + one ``merge_granularity``, not k (the §3.6 merge is a monoid, so
+  coalescing is exact);
+* ``query(name, delta, **params)`` — reduct for the dataset's *current*
+  content (pending updates drain first).  Results are cached by
+  ``(dataset, content fingerprint, measure, params)``; a repeat query on
+  unchanged content is a dictionary hit, a changed fingerprint falls
+  through to the handle's warm validate-and-repair path (state.py), and a
+  merge evicts the dataset's superseded-fingerprint entries (they can
+  never hit again), keeping the cache bounded by live content.
+
+The worker is deliberately single-flight: JAX dispatch is serialized anyway,
+and one worker makes the coalescing window well-defined (everything buffered
+before a query's turn merges ahead of it).
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.reduction import ReductionResult
+
+from .state import DatasetHandle
+
+__all__ = ["ReductServer", "ReduceRequest"]
+
+_STOP = object()
+
+# Completed-request log depth (introspection/stats only — not correctness).
+_REQUEST_LOG = 1024
+
+
+@dataclasses.dataclass
+class ReduceRequest:
+    """One query through the queue (the serving/engine.py Request shape)."""
+
+    rid: int
+    dataset: str
+    delta: str
+    params: Tuple[Tuple[str, Any], ...]
+    future: asyncio.Future
+    # filled by the worker:
+    cached: bool = False
+    warm: bool = False
+    prefix_kept: int = 0
+    merged_batches: int = 0
+    latency_s: float = 0.0
+
+
+class ReductServer:
+    """Stateful attribute-reduction service over evolving decision tables."""
+
+    def __init__(self) -> None:
+        # None marks a name reserved by an in-flight submit()
+        self._handles: Dict[str, Optional[DatasetHandle]] = {}
+        self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+        # keyed (dataset, fingerprint, measure, params); entries for a
+        # dataset's superseded fingerprints are evicted when a merge lands
+        self._cache: Dict[tuple, ReductionResult] = {}
+        self._queue: Optional[asyncio.Queue] = None
+        self._worker: Optional[asyncio.Task] = None
+        self._rid = 0
+        self.requests: Deque[ReduceRequest] = collections.deque(
+            maxlen=_REQUEST_LOG)
+        self.stats = {"queries": 0, "cache_hits": 0, "warm": 0, "cold": 0,
+                      "merges": 0, "updates": 0, "coalesced_batches": 0}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "ReductServer":
+        if self._worker is not None:
+            raise RuntimeError("server already started")
+        self._queue = asyncio.Queue()
+        self._worker = asyncio.create_task(self._worker_loop())
+        return self
+
+    async def stop(self) -> None:
+        if self._worker is None:
+            return
+        await self._queue.put(_STOP)
+        await self._worker
+        self._worker = None
+        self._queue = None
+
+    async def __aenter__(self) -> "ReductServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- operations ---------------------------------------------------------
+
+    async def submit(self, name: str, x=None, d=None, *, source=None,
+                     n_dec: Optional[int] = None, v_max: Optional[int] = None,
+                     exact: bool = True, chunk_rows: int = 65536) -> int:
+        """Create a dataset; returns its content fingerprint."""
+        if name in self._handles:
+            raise ValueError(f"dataset {name!r} already exists")
+        # reserve before awaiting: the to_thread suspension would otherwise
+        # let a concurrent same-name submit pass the existence check too,
+        # and the last writer would silently swallow the other's rows
+        self._handles[name] = None
+        try:
+            handle = await asyncio.to_thread(
+                DatasetHandle.create, x, d, source=source, n_dec=n_dec,
+                v_max=v_max, exact=exact, chunk_rows=chunk_rows)
+        except BaseException:
+            del self._handles[name]
+            raise
+        self._handles[name] = handle
+        return handle.fingerprint
+
+    async def update(self, name: str, x, d) -> None:
+        """Buffer a row batch; applied (coalesced) before the next query.
+
+        Validated against the dataset's declared schema *now*: a bad batch
+        is rejected to its sender instead of poisoning the coalesced merge
+        (which would silently drop the valid batches buffered beside it).
+        """
+        handle = self._require(name)
+        x, d = handle.validate_batch(x, d)
+        self._pending.setdefault(name, []).append((x, d))
+        self.stats["updates"] += 1
+
+    async def query(self, name: str, delta: str = "PR",
+                    **params) -> ReductionResult:
+        """Reduct for the dataset's current content (pending updates included)."""
+        self._require(name)
+        if self._queue is None:
+            raise RuntimeError("server not started (use 'async with' or start())")
+        self._rid += 1
+        req = ReduceRequest(
+            rid=self._rid, dataset=name, delta=delta,
+            params=tuple(sorted(params.items())),
+            future=asyncio.get_running_loop().create_future())
+        await self._queue.put(req)
+        return await req.future
+
+    def handle(self, name: str) -> DatasetHandle:
+        return self._require(name)
+
+    # -- worker -------------------------------------------------------------
+
+    def _require(self, name: str) -> DatasetHandle:
+        handle = self._handles.get(name)
+        if handle is None:  # absent, or reserved by an in-flight submit
+            raise KeyError(f"unknown dataset: {name!r}")
+        return handle
+
+    async def _worker_loop(self) -> None:
+        while True:
+            req = await self._queue.get()
+            if req is _STOP:
+                return
+            # drain the coalescing buffer on the event loop (no lock needed:
+            # update() and this pop both run on the loop thread)
+            batches = self._pending.pop(req.dataset, [])
+            try:
+                result = await asyncio.to_thread(self._process, req, batches)
+                if not req.future.cancelled():
+                    req.future.set_result(result)
+            except Exception as e:  # surface to the awaiting caller
+                if not req.future.cancelled():
+                    req.future.set_exception(e)
+
+    def _process(self, req: ReduceRequest,
+                 batches: List[Tuple[np.ndarray, np.ndarray]]) -> ReductionResult:
+        t0 = time.perf_counter()
+        handle = self._handles[req.dataset]
+        if batches:
+            # coalesce: k buffered batches → one merge
+            xs = np.concatenate([b[0] for b in batches])
+            ds = np.concatenate([b[1] for b in batches])
+            handle.update(xs, ds)
+            self.stats["merges"] += 1
+            self.stats["coalesced_batches"] += len(batches)
+            # content moved on: results for superseded fingerprints of this
+            # dataset can never hit again — drop them (bounds the cache)
+            fp = handle.fingerprint
+            stale = [k for k in self._cache
+                     if k[0] == req.dataset and k[1] != fp]
+            for k in stale:
+                del self._cache[k]
+        key = (req.dataset, handle.fingerprint, req.delta, req.params)
+        self.stats["queries"] += 1
+        hit = self._cache.get(key)
+        if hit is not None:
+            req.cached = True
+            self.stats["cache_hits"] += 1
+            result = hit
+        else:
+            result = handle.reduce(req.delta, **dict(req.params))
+            self._cache[key] = result
+            req.warm = handle.last_was_warm
+            req.prefix_kept = handle.last_prefix_kept
+            self.stats["warm" if req.warm else "cold"] += 1
+        req.merged_batches = len(batches)
+        req.latency_s = time.perf_counter() - t0
+        self.requests.append(req)
+        return result

@@ -184,6 +184,140 @@ def test_engine_distributed_1x1_mesh_matches_single_process(delta):
         r_mesh.theta_full, r_sp.theta_full, rtol=1e-6, atol=1e-7)
 
 
+@pytest.mark.parametrize("delta", DELTAS)
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_warm_start_parity(delta, engine):
+    """For static data, ``plar_reduce(warm_start=prefix)`` with a prefix the
+    cold run itself selected yields the same reduct and a byte-identical Θ
+    history — prefix folds *and* the greedy tail — on both engines.
+
+    Prefixes must cover the core (the cold run force-folds core attributes
+    before greedy, so a shorter warm prefix is a different — legal but not
+    comparable — trajectory)."""
+    rng = np.random.default_rng(37)
+    x, d = _table(rng, 180, 8)
+    cold = plar_reduce(x, d, delta=delta, engine=engine)
+    ks = sorted({len(cold.core),
+                 (len(cold.core) + len(cold.reduct)) // 2,
+                 len(cold.reduct)})
+    for k in ks:
+        warm = plar_reduce(x, d, delta=delta, engine=engine,
+                           warm_start=cold.reduct[:k])
+        assert warm.reduct == cold.reduct
+        assert warm.theta_history == cold.theta_history  # byte-identical
+        assert warm.core == []           # the prefix stands in for the core
+        assert warm.iterations == len(cold.reduct) - k
+        assert warm.theta_full == cold.theta_full
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_warm_start_parity_no_core(engine):
+    """Without core computation every greedy prefix is resumable: state
+    after folding ``reduct[:k]`` equals the cold run's state at step k."""
+    rng = np.random.default_rng(43)
+    x, d = _table(rng, 150, 7)
+    cold = plar_reduce(x, d, delta="SCE", engine=engine, compute_core=False)
+    for k in range(len(cold.reduct) + 1):
+        warm = plar_reduce(x, d, delta="SCE", engine=engine,
+                           compute_core=False, warm_start=cold.reduct[:k])
+        assert warm.reduct == cold.reduct
+        assert warm.theta_history == cold.theta_history
+
+
+def test_warm_start_seed_resume_single_compile():
+    """A warm run is seed + resume dispatches of the SAME compiled
+    while_loop as the cold run (theta_full is a traced operand): zero new
+    traces."""
+    rng = np.random.default_rng(47)
+    n, a, vmax, m = 160, 8, 3, 2
+    x, d = _table(rng, n, a, vmax=vmax, m=m)
+    x[0, :] = vmax - 1
+    d[0] = m - 1
+    cold = plar_reduce(x, d, delta="LCE", engine="device", grc_init=False)
+    runner = make_engine_run(
+        "LCE", "incremental", "segment", a, n, m, vmax, 1e-6, 1e-5, False, a,
+        64)
+    traces = runner._cache_size()
+    assert traces == 1
+    warm = plar_reduce(x, d, delta="LCE", engine="device", grc_init=False,
+                       warm_start=cold.reduct[: len(cold.core) or None])
+    assert warm.reduct == cold.reduct
+    assert runner._cache_size() == traces  # seed + resume reused the trace
+
+
+def test_warm_start_seed_state_carries_prefix():
+    """init_state_from_reduct records the prefix fold-by-fold: order, Θ
+    history, remaining mask — the validation signal the service trims on."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import engine_resume, init_state_from_reduct
+
+    rng = np.random.default_rng(53)
+    n, a, vmax, m = 140, 6, 3, 2
+    x, d = _table(rng, n, a, vmax=vmax, m=m)
+    x[0, :] = vmax - 1
+    d[0] = m - 1
+    cold = plar_reduce(x, d, delta="SCE", engine="device", grc_init=False,
+                       compute_core=False)
+    k = max(len(cold.reduct) - 1, 1)
+    runner = make_engine_run(
+        "SCE", "incremental", "segment", a, n, m, vmax, 1e-6, 1e-5, False, a,
+        64)
+    xs, ds = jnp.asarray(x), jnp.asarray(d)
+    ws = jnp.ones((n,), jnp.int32)
+    valid = np.ones((n,), bool)
+    st = init_state_from_reduct(runner, n, a, valid, xs, ds, ws,
+                                jnp.int32(n), cold.reduct[:k])
+    assert int(st.n_selected) == k
+    assert [int(v) for v in np.asarray(st.order)[:k]] == cold.reduct[:k]
+    assert [float(t) for t in np.asarray(st.theta_history)[:k]] \
+        == cold.theta_history[:k]
+    assert not any(np.asarray(st.remaining)[cold.reduct[:k]])
+    fin = engine_resume(runner, st, xs, ds, ws, jnp.int32(n),
+                        cold.theta_full)
+    nsel = int(fin.n_selected)
+    assert [int(v) for v in np.asarray(fin.order)[:nsel]] == cold.reduct
+
+
+def test_warm_start_validation():
+    rng = np.random.default_rng(59)
+    x, d = _table(rng, 80, 5)
+    with pytest.raises(ValueError, match="duplicates"):
+        plar_reduce(x, d, warm_start=[1, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        plar_reduce(x, d, warm_start=[0, 7])
+    with pytest.raises(ValueError, match="out of range"):
+        plar_reduce(x, d, warm_start=[-1])
+
+
+def test_engine_factory_cache_key():
+    """One lru entry per logical config: positional, keyword, defaulted, and
+    numpy-scalar-typed calls to the engine factories all key identically
+    (redundant entries would mean redundant XLA compiles)."""
+    from repro.core.engine import (
+        _make_engine_run,
+        _make_engine_step,
+        make_engine_step,
+    )
+
+    for make, cached in ((make_engine_run, _make_engine_run),
+                         (make_engine_step, _make_engine_step)):
+        # a config no other test uses, so the first call is a genuine miss
+        args = ("SCE", "incremental", "segment", 5, 32, 2, 3, 1e-6, 2e-5,
+                False, 5)
+        before = cached.cache_info().currsize
+        f0 = make(*args)                                    # defaulted tail
+        f1 = make(*args, 64, False)                         # positional tail
+        f2 = make(*args, mp_chunk=64, ladder=False)         # keyword tail
+        f3 = make("SCE", mode="incremental", backend="segment",
+                  n_attrs=np.int32(5), cap=np.int64(32), m=np.int32(2),
+                  v_max=np.int32(3), tol=np.float64(1e-6),
+                  tie_tol=np.float64(2e-5), shrink=np.bool_(False),
+                  max_sel=np.int32(5))                      # numpy scalars
+        assert f0 is f1 is f2 is f3
+        assert cached.cache_info().currsize == before + 1
+
+
 def test_engine_distributed_fused_collective_requires_host():
     import jax
 

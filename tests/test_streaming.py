@@ -15,6 +15,7 @@ import pytest
 from repro.core import (
     build_granularity,
     build_granularity_streaming,
+    fold_chunk,
     merge_granularity,
     plar_reduce,
     fspa_reduce,
@@ -106,6 +107,44 @@ def test_capacity_doubling_growth():
     g = build_granularity_streaming(t.chunks(16), n_dec=2, v_max=8)
     assert g.capacity >= int(g.num)
     assert g.capacity <= 2 * int(g.num)  # pow2 policy: never more than 2× live
+
+
+def test_fold_empty_chunk_is_identity():
+    """An empty row chunk folds to the accumulator itself — the monoid
+    identity — and an all-empty stream raises instead of returning nothing."""
+    rng = np.random.default_rng(12)
+    x = rng.integers(0, 3, size=(80, 4)).astype(np.int32)
+    d = rng.integers(0, 2, size=(80,)).astype(np.int32)
+    g = build_granularity(jnp.asarray(x), jnp.asarray(d), n_dec=2, v_max=3)
+    empty_x = np.zeros((0, 4), np.int32)
+    empty_d = np.zeros((0,), np.int32)
+    assert fold_chunk(g, empty_x, empty_d, n_dec=2, v_max=3) is g
+    assert fold_chunk(None, empty_x, empty_d, n_dec=2, v_max=3) is None
+    # empty chunks interleaved in a stream do not disturb the fold
+    chunks = [(x[:40], d[:40]), (empty_x, empty_d), (x[40:], d[40:])]
+    _assert_same_granularity(
+        build_granularity_streaming(iter(chunks), n_dec=2, v_max=3), g)
+    with pytest.raises(ValueError, match="no non-empty chunks"):
+        build_granularity_streaming(iter([(empty_x, empty_d)]), n_dec=2,
+                                    v_max=3)
+
+
+def test_merge_with_self_doubles_weights():
+    """g ⊕ g: same granules (count and representatives), doubled
+    multiplicities and |U| — weights merge additively, keys set-merge."""
+    rng = np.random.default_rng(13)
+    x = rng.integers(0, 4, size=(200, 5)).astype(np.int32)
+    d = rng.integers(0, 3, size=(200,)).astype(np.int32)
+    g = build_granularity(jnp.asarray(x), jnp.asarray(d), n_dec=3, v_max=4)
+    m = merge_granularity(g, g)
+    num = int(g.num)
+    assert int(m.num) == num                      # granule count preserved
+    assert int(m.n_total) == 2 * int(g.n_total)
+    np.testing.assert_array_equal(np.asarray(m.x)[:num], np.asarray(g.x)[:num])
+    np.testing.assert_array_equal(np.asarray(m.d)[:num], np.asarray(g.d)[:num])
+    np.testing.assert_array_equal(np.asarray(m.w)[:num],
+                                  2 * np.asarray(g.w)[:num])
+    assert int(np.asarray(m.w)[num:].sum()) == 0  # padding stays zero-weight
 
 
 def test_with_capacity_guard():
