@@ -1,0 +1,120 @@
+"""Ensemble benchmark: stacked multi-config engine vs a sequential loop.
+
+The stacked engine (DESIGN.md §3.8) runs a whole (measure × shrink × ...)
+grid as ONE ``lax.while_loop`` dispatch over one shared granularity: one XLA
+compile for the grid and one read of each granule/candidate tile per
+iteration, where the sequential loop pays a separate compile and a separate
+pass per config.  This section measures that directly, at two grains:
+
+* **cold** — end-to-end wall-clock in a fresh-config process state,
+  compiles included: the cost a first-time grid query actually pays (the
+  serving-layer number — ``ReductServer.query_ensemble`` is exactly this).
+  The stacked grid compiles once; the sequential loop compiles per config
+  (each (delta, shrink) pair is its own static ``_Cfg``), which is where
+  the bulk of the aggregate configs/sec win comes from.
+* **warm** — best-of-3 with every compile cached: the pure loop-execution
+  comparison.  On XLA:CPU ``while_loop`` bodies run mostly single-threaded,
+  so the stacked body (all configs per iteration) and the sequential loops
+  (one config at a time) do similar total compute and the warm ratio mainly
+  reflects saved dispatch/driver overhead; on TPU/GPU the shared tile reads
+  translate into saved HBM traffic.
+
+Per-config reducts and Θ histories are asserted byte-identical between the
+two paths on every shape (the §3.8 correctness contract; exhaustively
+covered in tests/test_ensemble.py).
+
+Snapshot with ``python -m benchmarks.run --preset ensemble`` →
+``benchmarks/BENCH_ensemble.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from .engine_bench import _latent_table
+
+_MEASURES = ("PR", "SCE", "LCE", "CCE")
+
+
+def ensemble_stacked_vs_sequential() -> List[Dict]:
+    """Aggregate configs/sec: one stacked dispatch vs N sequential engines."""
+    from repro.core import plar_reduce
+    from repro.core.reduction import plar_reduce_ensemble
+
+    # throwaway warmup on an unrelated shape: absorbs process-wide one-time
+    # costs (jax init, thread pools) so neither timed path is charged for
+    # them; its compiles share no cache entry with the benchmark shapes
+    xw, dw = _latent_table(1000, 8, 3, 3, seed=1)
+    plar_reduce(xw, dw, delta="PR", engine="device", compute_core=False)
+    plar_reduce_ensemble(xw, dw, configs=["PR"], backend="segment")
+
+    shapes = [
+        # (rows, attrs, latent, vmax, grid) — ≥32 attrs / ≥4 configs are the
+        # acceptance shapes; the 8-config grid crosses measures with shrink
+        (20000, 32, 5, 3,
+         [{"delta": dd, "shrink": s, "compute_core": False}
+          for dd in _MEASURES for s in (False, True)]),
+        (40000, 48, 5, 3,
+         [{"delta": dd, "compute_core": False} for dd in _MEASURES]),
+    ]
+    rows = []
+    for n, a, nl, vmax, grid in shapes:
+        x, d = _latent_table(n, a, nl, vmax, seed=n + a)
+
+        def run_stacked():
+            return plar_reduce_ensemble(x, d, configs=grid, backend="segment",
+                                        mp_chunk=64)
+
+        def run_sequential():
+            return [plar_reduce(x, d, delta=g["delta"],
+                                shrink=g.get("shrink", False),
+                                compute_core=False, engine="device",
+                                backend="segment", mp_chunk=64)
+                    for g in grid]
+
+        # cold: stacked first, so it (not the sequential loop) pays the
+        # shared host-side compiles (Θ(D|C) ids/contingency) — conservative
+        # for the stacked side's reported win
+        t0 = time.perf_counter()
+        ens = run_stacked()
+        cold_stacked = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        seq = run_sequential()
+        cold_seq = time.perf_counter() - t0
+
+        for r_e, r_s in zip(ens, seq):
+            assert r_e.reduct == r_s.reduct, "stacked/sequential disagree"
+            assert r_e.theta_history == r_s.theta_history, \
+                "stacked/sequential Θ histories disagree"
+
+        warm_stacked = min(
+            _timed(run_stacked) for _ in range(3))
+        warm_seq = min(
+            _timed(run_sequential) for _ in range(3))
+
+        c = len(grid)
+        rows.append({
+            "table": f"grc n{n} A{a} latent{nl}",
+            "configs": c,
+            "selected": [len(r.reduct) for r in ens][0],
+            "cold_stacked_s": round(cold_stacked, 3),
+            "cold_sequential_s": round(cold_seq, 3),
+            "cold_cfg_per_s_stacked": round(c / cold_stacked, 3),
+            "cold_cfg_per_s_sequential": round(c / cold_seq, 3),
+            "cold_speedup": round(cold_seq / max(cold_stacked, 1e-9), 2),
+            "warm_stacked_s": round(warm_stacked, 3),
+            "warm_sequential_s": round(warm_seq, 3),
+            "warm_speedup": round(warm_seq / max(warm_stacked, 1e-9), 2),
+        })
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+ALL_ENSEMBLE_BENCHES = {
+    "ensemble_stacked_vs_sequential": ensemble_stacked_vs_sequential,
+}

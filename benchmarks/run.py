@@ -31,6 +31,7 @@ def _print_rows(name: str, rows) -> None:
 # as benchmarks/BENCH_NAME.json (an implicit --tag NAME).
 PRESETS = {
     "engine": ["engine_host_vs_device"],
+    "ensemble": ["ensemble_stacked_vs_sequential"],
     "kernels": ["contingency_backends", "fused_theta_vs_unfused"],
     "ingest": ["ingest_stream_vs_monolithic"],
     "sweep": ["sweep_ladder_speedup"],
@@ -40,6 +41,7 @@ PRESETS = {
 
 def main() -> None:
     from .engine_bench import ALL_ENGINE_BENCHES
+    from .ensemble_bench import ALL_ENSEMBLE_BENCHES
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
@@ -71,7 +73,8 @@ def main() -> None:
         tag = tag or preset
     wanted = argv or None
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
-            **ALL_INGEST_BENCHES, **ALL_SERVICE_BENCHES}
+            **ALL_ENSEMBLE_BENCHES, **ALL_INGEST_BENCHES,
+            **ALL_SERVICE_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:

@@ -69,11 +69,13 @@ import numpy as np
 from . import measures
 from .granularity import dyn_column_terms, ids_from_presence, presence_bitmap
 from .plan import (
+    candidate_contingency,
     candidate_theta,
     contingency_from_ids,
     ids_by_sort,
     ladder_rungs,
     sweep_contingency,
+    theta_tiled_raw,
 )
 
 __all__ = [
@@ -85,12 +87,29 @@ __all__ = [
     "make_engine_run",
     "unpack_result",
     "DEVICE_BACKENDS",
+    "EnsembleOperands",
+    "init_ensemble_state",
+    "make_ensemble_run",
+    "run_ensemble",
+    "unpack_ensemble_result",
+    "ENSEMBLE_DELTAS",
+    "ENSEMBLE_BACKENDS",
 ]
 
 # Θ backends that may run inside the while_loop body (DESIGN.md §3.5).
 # ``sweep_xla`` is the read-once slab backend of DESIGN.md §5.3; the Pallas
 # kernels (``pallas``/``fused``/``sweep``) stay on the host loop.
 DEVICE_BACKENDS = ("segment", "onehot", "fused_xla", "sweep_xla")
+
+# The static measure branch set of the ensemble engine's per-config
+# lax.switch: every config's delta is a traced *index* into this tuple, so
+# the compiled executable is independent of which measures a grid uses.
+ENSEMBLE_DELTAS = tuple(measures.RAW_ROWS)  # ("PR", "SCE", "LCE", "CCE")
+
+# Θ backends the stacked engine supports (DESIGN.md §3.8).  ``fused_xla`` is
+# excluded: its measure is fused into the contingency accumulation itself, so
+# it cannot split into a shared contingency + per-config measure epilogue.
+ENSEMBLE_BACKENDS = ("segment", "onehot", "sweep_xla")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -229,12 +248,17 @@ class _MeshColl:
 # ---------------------------------------------------------------------------
 
 
-def _advance(cfg: _Cfg, coll, r_ids, x_col, d, w, active, n):
+def _advance(cfg, coll, r_ids, x_col, d, w, active, n, eval_theta=None):
     """Fold one attribute into the class ids: pack → compact → Θ → purity.
 
     The presence bitmap psums over data shards before ranking, so every shard
     agrees on the global dense numbering (DESIGN.md §3.1) — with
     :class:`_LocalColl` this is exactly ``granularity.compact_ids``.
+
+    ``eval_theta(cont, n)`` overrides the measure evaluation: the ensemble
+    engine passes a ``lax.switch`` over the measures so ``delta`` can be a
+    traced per-config operand instead of the static ``cfg.delta`` (the
+    default, bit-identical for all existing callers).
     """
     nb = cfg.n_bins
     packed = r_ids * cfg.v_max + x_col
@@ -245,7 +269,8 @@ def _advance(cfg: _Cfg, coll, r_ids, x_col, d, w, active, n):
     seg = jnp.where(active, new_ids * cfg.m + d, nb * cfg.m)
     cont = jax.ops.segment_sum(w_, seg, num_segments=nb * cfg.m + 1)[:-1]
     cont = coll.psum_data(cont.reshape(nb, cfg.m))
-    theta = measures.evaluate(cfg.delta, cont, n)
+    theta = (measures.evaluate(cfg.delta, cont, n) if eval_theta is None
+             else eval_theta(cont, n))
 
     e = cont.sum(-1)
     pure_row = (cont.max(-1) == e) & (e > 0)
@@ -253,8 +278,11 @@ def _advance(cfg: _Cfg, coll, r_ids, x_col, d, w, active, n):
     return new_ids, k_new.astype(jnp.int32), theta, g_pure
 
 
-def _rung_index(cfg: _Cfg, k):
+def _rung_index(cfg, k):
     """Device-side ladder rung selection: first rung ≥ K·V (DESIGN.md §5.3).
+
+    ``cfg`` is any config carrying ``v_max``/``rungs`` (``_Cfg`` or the
+    ensemble ``_EnsCfg``).
 
     ``k`` is the device-resident class count (``st.k``): packed ids live in
     ``[0, K·V)``, rungs are ascending, and the top rung is the exact full
@@ -642,3 +670,343 @@ def unpack_result(fin: SelectionState, core_count: int):
     # true count, which is ≥ the host loop's shrinking len(remaining)
     n_evals = iters * n_attrs
     return reduct, hist, iters, n_evals
+
+
+# ---------------------------------------------------------------------------
+# stacked multi-config engine (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+#
+# One ``lax.while_loop`` dispatch advances a whole grid of reduction configs
+# — (measure, tol, tie_tol, max_features, shrink, forced core, bagged row
+# weights) — over ONE shared granularity: the config axis is a leading [C]
+# axis on :class:`SelectionState` and the per-config parameters ride along as
+# *traced* operands (:class:`EnsembleOperands`), so the whole grid costs one
+# compile and every granule/candidate tile is read once per iteration instead
+# of once per config.  Per-config measures dispatch through a ``lax.switch``
+# over :data:`ENSEMBLE_DELTAS` whose branches run exactly the sequential
+# engine's evaluation ops — the byte-identical-per-config contract (asserted
+# by tests/test_ensemble.py) rests on that switch executing one branch, not a
+# blend.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EnsembleOperands:
+    """Per-config traced parameters of the stacked engine, leading axis [C].
+
+    Everything the sequential engine bakes into its static ``_Cfg`` that can
+    instead be a traced operand lives here — which is exactly what collapses
+    a C-config grid from C compiles to one:
+
+      delta_idx   [C]          i32   index into ENSEMBLE_DELTAS
+      tol         [C]          f32   stopping tolerance
+      tie_tol     [C]          f32   argmin tie band
+      max_sel     [C]          i32   max_features (n_attrs when unbounded)
+      shrink      [C]          bool  FSPA universe shrinking
+      theta_full  [C]          f32   Θ(D|C) stopping target (per-config w!)
+      n           [C]          i32   total row weight |U|
+      w           [C, cap]     i32   granule weights (bagged resample seam)
+      core_attrs  [C, max(A,1)] i32  forced-selection prefix, padded
+      core_count  [C]          i32   number of forced selections
+    """
+
+    delta_idx: jnp.ndarray
+    tol: jnp.ndarray
+    tie_tol: jnp.ndarray
+    max_sel: jnp.ndarray
+    shrink: jnp.ndarray
+    theta_full: jnp.ndarray
+    n: jnp.ndarray
+    w: jnp.ndarray
+    core_attrs: jnp.ndarray
+    core_count: jnp.ndarray
+
+    def tree_flatten(self):
+        return (
+            self.delta_idx, self.tol, self.tie_tol, self.max_sel, self.shrink,
+            self.theta_full, self.n, self.w, self.core_attrs, self.core_count,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_cfgs(self) -> int:
+        return self.delta_idx.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class _EnsCfg:
+    """Static trace-time configuration of the stacked engine.
+
+    Deliberately *smaller* than ``_Cfg``: everything per-config moved into
+    :class:`EnsembleOperands`, so the compile cache keys only on shapes and
+    the shared evaluation strategy.
+    """
+
+    mode: str            # "incremental" | "spark"
+    backend: str         # ENSEMBLE_BACKENDS
+    n_cfgs: int
+    n_attrs: int
+    cap: int
+    m: int
+    v_max: int
+    mp_chunk: int
+    ladder: bool = False
+
+    @property
+    def n_bins(self) -> int:
+        return self.cap * self.v_max
+
+    @property
+    def rungs(self):
+        return ladder_rungs(self.n_bins)
+
+
+def _theta_switch(delta_idx, cont, n):
+    """Θ(cont) under a *traced* measure index: one-branch lax.switch whose
+    branches are exactly ``measures.evaluate`` per measure — the selected
+    branch runs the same ops as the sequential engine, so bits match."""
+    return jax.lax.switch(
+        delta_idx,
+        [partial(measures.evaluate, dd) for dd in ENSEMBLE_DELTAS], cont, n)
+
+
+def _sweep_theta_switch(delta_idx, cont, n):
+    """The sweep epilogue under a traced measure index: tile-ordered θ'
+    accumulation (plan.theta_tiled_raw) + scale, per branch — the §5.3
+    structure whose bitwise rung invariance lets the stacked ladder share
+    one rung across configs."""
+
+    def mk(dd):
+        def branch(cont, n):
+            return measures.theta_scale(dd, theta_tiled_raw(dd, cont), n)
+
+        return branch
+
+    return jax.lax.switch(
+        delta_idx, [mk(dd) for dd in ENSEMBLE_DELTAS], cont, n)
+
+
+def _eval_ensemble_one(cfg: _EnsCfg, x, x_t, d, nb, st_c, w_c, n_c, delta_idx):
+    """One config's candidate evaluation Θ(D|R∪{a}) for every a — the
+    ensemble twin of :func:`_eval_local`, vmapped over the config axis by
+    the runner.  Mirrors the sequential evaluation op-for-op (same
+    contingency path, same chunking) with the measure dispatched through
+    the one-branch switch."""
+    cols = jnp.arange(cfg.n_attrs, dtype=jnp.int32)
+    if cfg.mode == "spark":
+        # paper-faithful re-key per candidate; the ladder does not apply
+        # (sort-ranked ids are bounded by the live-granule count, not K·V)
+        def one(col):
+            t1 = dyn_column_terms(x, col, 0)
+            t2 = dyn_column_terms(x, col, 7919)
+            ids, _k = ids_by_sort([st_c.h2 + t2, st_c.h1 + t1], st_c.active)
+            cont = contingency_from_ids(
+                ids, d, w_c, st_c.active, n_bins=cfg.cap, m=cfg.m)
+            return _theta_switch(delta_idx, cont, n_c)
+
+        return jax.lax.map(one, cols) + st_c.pr_correction
+
+    def chunk(cc):
+        x_cand = jnp.take(x_t, cc, axis=0)                     # [nc, cap]
+        if cfg.backend == "sweep_xla":
+            cont = sweep_contingency(
+                x_cand, st_c.r_ids, d, w_c, st_c.active, v_max=cfg.v_max,
+                n_bins=nb, m=cfg.m)
+            return _sweep_theta_switch(delta_idx, cont, n_c)
+        packed = st_c.r_ids[None, :] * cfg.v_max + x_cand
+        cont = candidate_contingency(
+            packed, d, w_c, st_c.active, n_bins=nb, m=cfg.m,
+            backend=cfg.backend)
+        return _theta_switch(delta_idx, cont, n_c)
+
+    # same mp_chunk grid as _eval_local: per-candidate values are
+    # independent, so chunking never changes bits
+    nc = min(cfg.mp_chunk, cfg.n_attrs)
+    a_pad = -(-cfg.n_attrs // nc) * nc
+    if a_pad == nc:
+        return chunk(cols) + st_c.pr_correction
+    grid = (jnp.arange(a_pad, dtype=jnp.int32) % cfg.n_attrs).reshape(-1, nc)
+    return (jax.lax.map(chunk, grid).reshape(-1)[: cfg.n_attrs]
+            + st_c.pr_correction)
+
+
+def make_ensemble_run(mode: str, backend: str, n_cfgs: int, n_attrs: int,
+                      cap: int, m: int, v_max: int, mp_chunk: int = 64,
+                      ladder: bool = False):
+    """The whole config grid as one ``lax.while_loop`` (single compile).
+
+    Returns ``run(st_stack, x, d, ops) -> st_stack`` where every
+    :class:`SelectionState` leaf carries a leading ``[n_cfgs]`` axis and
+    ``ops`` is the :class:`EnsembleOperands` stack.  Same key normalization
+    as :func:`make_engine_run` (one lru entry per logical config).
+    """
+    if backend not in ENSEMBLE_BACKENDS:
+        raise ValueError(
+            f"ensemble engine does not support backend={backend!r} "
+            f"(one of: {', '.join(ENSEMBLE_BACKENDS)})")
+    if ladder and backend != "sweep_xla":
+        raise ValueError(
+            "ensemble ladder requires backend='sweep_xla': the stacked loop "
+            "shares one rung (max K across configs) per iteration, which is "
+            "only bit-safe under the §5.3 sweep rung invariance")
+    return _make_ensemble_run(str(mode), str(backend), int(n_cfgs),
+                              int(n_attrs), int(cap), int(m), int(v_max),
+                              int(mp_chunk), bool(ladder))
+
+
+@lru_cache(maxsize=None)
+def _make_ensemble_run(mode, backend, n_cfgs, n_attrs, cap, m, v_max,
+                       mp_chunk, ladder):
+    cfg = _EnsCfg(mode, backend, n_cfgs, n_attrs, cap, m, v_max, mp_chunk,
+                  ladder)
+    coll = _LocalColl()
+    pr_idx = ENSEMBLE_DELTAS.index("PR")
+
+    @jax.jit
+    def run(st: SelectionState, x, d, ops: EnsembleOperands) -> SelectionState:
+        # shared candidate slab, hoisted out of the loop exactly like the
+        # sequential runner — and read ONCE per iteration for all configs
+        x_t = x.T
+
+        def cond_one(st_c, ops_c):
+            # the sequential cond with tol/max_sel as traced operands; the
+            # f32 arithmetic theta_full + tol matches the static-Python
+            # version bit-for-bit (both are f32 + f32)
+            in_core = st_c.n_selected < ops_c.core_count
+            greedy = (
+                (st_c.n_selected < cfg.n_attrs)
+                & (st_c.theta_r > ops_c.theta_full + ops_c.tol)
+                & (st_c.n_selected < ops_c.max_sel)
+            )
+            return in_core | greedy
+
+        def eval_rung(nb, st):
+            def one(st_c, w_c, n_c, di):
+                return _eval_ensemble_one(
+                    cfg, x, x_t, d, nb, st_c, w_c, n_c, di)
+
+            return jax.vmap(one)(st, ops.w, ops.n, ops.delta_idx)  # [C, A]
+
+        def body_one(st_c, ops_c, thetas_c):
+            forced = st_c.n_selected < ops_c.core_count
+
+            # sequential pick_core / pick_greedy as a select on precomputed
+            # thetas (the grid shares the evaluation, so the lax.cond that
+            # skips evaluation during forced folds has nothing left to skip)
+            core_pick = ops_c.core_attrs[
+                jnp.minimum(st_c.n_selected, cfg.n_attrs - 1)]
+            masked = jnp.where(st_c.remaining, thetas_c, jnp.inf)
+            greedy_pick = jnp.argmax(
+                masked <= masked.min() + ops_c.tie_tol).astype(jnp.int32)
+            best = jnp.where(forced, core_pick, greedy_pick)
+
+            x_col = jnp.take(x, best, axis=1)
+            new_ids, k_new, theta, g_pure = _advance(
+                cfg, coll, st_c.r_ids, x_col, d, ops_c.w, st_c.active,
+                ops_c.n, eval_theta=partial(_theta_switch, ops_c.delta_idx))
+            theta_rec = theta + st_c.pr_correction
+
+            if cfg.mode == "spark":
+                h1 = st_c.h1 + dyn_column_terms(x, best, 0)
+                h2 = st_c.h2 + dyn_column_terms(x, best, 7919)
+            else:
+                h1, h2 = st_c.h1, st_c.h2
+
+            # traced-shrink: a select per config instead of _Cfg branching;
+            # shrink=False leaves active/pr_correction exactly unchanged
+            active = st_c.active & ~(g_pure & ops_c.shrink)
+            shed = jnp.sum(jnp.where(g_pure, ops_c.w, 0)).astype(jnp.float32)
+            pr_corr = jnp.where(
+                ops_c.shrink & (ops_c.delta_idx == pr_idx),
+                st_c.pr_correction - shed / jnp.asarray(ops_c.n, jnp.float32),
+                st_c.pr_correction)
+
+            return SelectionState(
+                r_ids=new_ids,
+                h1=h1,
+                h2=h2,
+                active=active,
+                remaining=st_c.remaining.at[best].set(False),
+                theta_history=st_c.theta_history.at[st_c.n_selected].set(
+                    theta_rec),
+                order=st_c.order.at[st_c.n_selected].set(best),
+                k=k_new,
+                theta_r=theta_rec,
+                pr_correction=pr_corr,
+                n_selected=st_c.n_selected + 1,
+            )
+
+        def cond(st):
+            return jnp.any(jax.vmap(cond_one)(st, ops))
+
+        def body(st):
+            go = jax.vmap(cond_one)(st, ops)                    # [C]
+            if cfg.mode == "spark" or not cfg.ladder or len(cfg.rungs) == 1:
+                thetas = eval_rung(cfg.n_bins, st)
+            else:
+                # shared rung across the grid: smallest rung covering
+                # max_c(K_c)·V, picked OUTSIDE the vmap so the switch stays
+                # a one-branch switch (a vmapped switch over per-config
+                # rungs would lower to a select executing every branch).
+                # Bit-safe only for sweep_xla (factory-enforced): each
+                # config's thetas are invariant to any rung ≥ its own K·V.
+                thetas = jax.lax.switch(
+                    _rung_index(cfg, jnp.max(st.k)),
+                    [partial(eval_rung, nb) for nb in cfg.rungs], st)
+            new = jax.vmap(body_one)(st, ops, thetas)
+
+            # freeze configs whose cond is already false: conds are monotone
+            # (a frozen config stays frozen), so the loop runs max_c(nsel_c)
+            # bodies and every config's trajectory is exactly its sequential
+            # one
+            def gate(old, upd):
+                g = go.reshape(go.shape + (1,) * (upd.ndim - 1))
+                return jnp.where(g, upd, old)
+
+            return jax.tree_util.tree_map(gate, st, new)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    return run
+
+
+def init_ensemble_state(cap: int, n_attrs: int, valid, n_cfgs: int) -> SelectionState:
+    """Fresh stacked state: :func:`init_state` broadcast to a leading [C]."""
+    st = init_state(cap, n_attrs, valid)
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_cfgs,) + leaf.shape), st)
+
+
+def run_ensemble(runner, cap: int, n_attrs: int, valid, x, d,
+                 ops: EnsembleOperands):
+    """Init stacked state → one while_loop dispatch → final stacked state.
+
+    Returns ``(final_state, loop_s)``; unpack per config with
+    :func:`unpack_ensemble_result`.
+    """
+    import time
+
+    t0 = time.perf_counter()
+    st = init_ensemble_state(cap, n_attrs, valid, ops.n_cfgs)
+    fin = jax.block_until_ready(runner(st, x, d, ops))
+    return fin, time.perf_counter() - t0
+
+
+def unpack_ensemble_result(fin: SelectionState, core_counts):
+    """Stacked final state → per-config (reduct, theta_history, iterations,
+    n_evals) — one device→host transfer for the whole grid."""
+    order = np.asarray(fin.order)
+    hist = np.asarray(fin.theta_history)
+    nsel = np.asarray(fin.n_selected)
+    n_attrs = fin.remaining.shape[-1]
+    out = []
+    for c, cc in enumerate(core_counts):
+        ns = int(nsel[c])
+        reduct = [int(a) for a in order[c, :ns]]
+        h = [float(t) for t in hist[c, :ns]]
+        iters = ns - int(cc)
+        out.append((reduct, h, iters, iters * n_attrs))
+    return out

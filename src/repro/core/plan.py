@@ -63,6 +63,7 @@ __all__ = [
     "theta_for_ids",
     "ladder_rungs",
     "rung_for",
+    "theta_tiled_raw",
     "LADDER_TILE",
     "SWEEP_BACKENDS",
 ]
@@ -299,6 +300,13 @@ def _theta_tiled_raw(delta, cont, *, tile: int = LADDER_TILE):
 
     raw, _ = jax.lax.scan(step, jnp.zeros((nc,), jnp.float32), tiles)
     return raw
+
+
+# Public alias: the ensemble engine (core/engine.py) composes the sweep
+# epilogue with a per-config measure switch, so the tile-ordered accumulation
+# — the structure the §5.3 bitwise rung-invariance rests on — is part of the
+# module's contract, not an implementation detail.
+theta_tiled_raw = _theta_tiled_raw
 
 
 def _theta_sweep_xla(delta, x_t, r_ids, d, w, valid, n, *, v_max, n_bins, m):

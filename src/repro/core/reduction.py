@@ -30,7 +30,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import measures
-from .engine import DEVICE_BACKENDS, make_engine_run, run_engine
+from .engine import (
+    DEVICE_BACKENDS,
+    ENSEMBLE_BACKENDS,
+    ENSEMBLE_DELTAS,
+    EnsembleOperands,
+    make_engine_run,
+    make_ensemble_run,
+    run_engine,
+    run_ensemble,
+    unpack_ensemble_result,
+)
 from .granularity import (
     Granularity,
     build_granularity,
@@ -53,8 +63,10 @@ from .plan import (
     subset_ids,
 )
 
-__all__ = ["ReductionResult", "plar_reduce", "har_reduce", "fspa_reduce",
-           "raw_granularity", "resolve_granularity"]
+__all__ = ["ReductionResult", "plar_reduce", "plar_reduce_ensemble",
+           "har_reduce", "fspa_reduce", "raw_granularity",
+           "resolve_granularity", "bagged_weights", "expand_ensemble_grid",
+           "normalize_ensemble_configs"]
 
 _MODES = ("incremental", "spark")
 _BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla", "sweep",
@@ -381,9 +393,13 @@ def plar_reduce(
     (asserted by tests/test_engine.py::test_warm_start_parity).
 
     Like core attributes, the forced prefix folds unconditionally:
-    ``max_features`` caps only further *greedy* additions (so
-    ``warm_start=prefix, max_features=0`` folds the prefix and adds
-    nothing — a pure re-evaluation of the prefix's Θ trajectory).
+    ``max_features`` caps only further *greedy* additions.  A prefix is
+    validated up front — entries must be integral, unique, in ``[0, A)``,
+    and no longer than ``max_features`` when one is set (the cap bounds the
+    whole selection, so a longer prefix could never be a valid result) —
+    raising ``ValueError`` instead of a shape error inside the compiled
+    engine.  ``warm_start=prefix, max_features=len(prefix)`` folds the
+    prefix and adds nothing — a pure re-evaluation of its Θ trajectory.
     """
     t0 = time.perf_counter()
     if mode not in _MODES:
@@ -405,13 +421,25 @@ def plar_reduce(
 
     warm: Optional[List[int]] = None
     if warm_start is not None:
-        warm = [int(a) for a in warm_start]
+        warm = []
+        for a in warm_start:
+            ai = int(a)
+            if ai != a:
+                raise ValueError(
+                    f"warm_start entries must be integral attribute "
+                    f"indices, got {a!r}")
+            warm.append(ai)
         if len(set(warm)) != len(warm):
             raise ValueError(f"warm_start contains duplicates: {warm}")
         bad = [a for a in warm if not 0 <= a < A]
         if bad:
             raise ValueError(
                 f"warm_start attributes {bad} out of range [0, {A})")
+        if max_features is not None and len(warm) > int(max_features):
+            raise ValueError(
+                f"warm_start prefix of length {len(warm)} exceeds "
+                f"max_features={int(max_features)}: the cap bounds the whole "
+                f"selection, so the prefix could never be a valid result")
 
     # Θ(D|C): stopping target.
     all_cols = jnp.arange(A, dtype=jnp.int32)
@@ -588,6 +616,229 @@ def plar_reduce(
         elapsed_s=time.perf_counter() - t0,
         per_iteration_s=per_iter_s,
     )
+
+
+# ---------------------------------------------------------------------------
+# reduct ensembles: one compile for a whole config grid (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+
+
+# Per-config knobs the ensemble grid accepts; everything else (mode, backend,
+# ladder, mp_chunk, ingestion) is shared — those are *static* trace choices,
+# and sharing them is what lets the grid share one compile.
+_ENSEMBLE_DEFAULTS = {
+    "delta": "PR",
+    "tol": 1e-6,
+    "tie_tol": 1e-5,
+    "max_features": None,
+    "shrink": False,
+    "compute_core": True,
+    "eps": 0.0,
+    "seed": None,          # bagged row-weight resample seed (None = no bag)
+}
+
+
+def expand_ensemble_grid(configs, seeds=None):
+    """Expand ``configs`` (dicts or bare measure names) × ``seeds``.
+
+    ``seeds`` crosses every config with one bagged replica per seed (the
+    bagged-ensemble idiom: ``configs=["PR"], seeds=range(8)`` is an 8-bag
+    PR ensemble).  Configs carrying their own explicit ``seed`` cannot be
+    combined with ``seeds=`` (ambiguous).  Returns plain dicts, defaults
+    NOT yet filled — callers that key caches off configs use this expanded
+    raw form so cache keys stay minimal.
+    """
+    expanded = []
+    for c in configs:
+        if isinstance(c, str):
+            c = {"delta": c}
+        c = dict(c)
+        if seeds is None:
+            expanded.append(c)
+            continue
+        if c.get("seed") is not None:
+            raise ValueError(
+                "pass bag seeds either per config ('seed') or via seeds=, "
+                "not both")
+        for s in seeds:
+            expanded.append({**c, "seed": int(s)})
+    return expanded
+
+
+def normalize_ensemble_configs(configs, seeds=None) -> List[dict]:
+    """Validate + default-fill an ensemble grid (see ``_ENSEMBLE_DEFAULTS``)."""
+    expanded = expand_ensemble_grid(configs, seeds)
+    if not expanded:
+        raise ValueError("ensemble configs must be non-empty")
+    out = []
+    for c in expanded:
+        unknown = sorted(set(c) - set(_ENSEMBLE_DEFAULTS))
+        if unknown:
+            raise ValueError(
+                f"unknown ensemble config keys {unknown} "
+                f"(one of: {', '.join(sorted(_ENSEMBLE_DEFAULTS))})")
+        full = {**_ENSEMBLE_DEFAULTS, **c}
+        if full["delta"] not in ENSEMBLE_DELTAS:
+            raise ValueError(
+                f"unknown measure: {full['delta']!r} "
+                f"(one of: {', '.join(ENSEMBLE_DELTAS)})")
+        out.append(full)
+    return out
+
+
+def bagged_weights(gran: Granularity, seed: int) -> np.ndarray:
+    """Bootstrap resample of the row multiset as granule weights ``[cap]``.
+
+    Draws ``n_total`` rows with replacement from the live rows — a
+    multinomial over granules weighted by ``w`` — and returns the resampled
+    per-granule counts.  Reweighting ``w`` keeps the granularity itself
+    (``x``/ids/capacity) shared across every bag: granules are equivalence
+    classes of *attribute values*, so a row resample only changes how many
+    rows sit in each class, never the classes — no per-seed rebuild, and the
+    stacked engine can carry all bags over one granule table.  Zero-weight
+    granules stay live (``valid`` is untouched): they contribute 0 to every
+    contingency and Θ, and keeping them preserves class numbering so results
+    match a sequential run on the same reweighted granularity bit-for-bit.
+    """
+    w = np.asarray(gran.w, np.int64)
+    valid = np.asarray(gran.valid)
+    live = np.where(valid, w, 0)
+    total = int(live.sum())
+    if total <= 0:
+        raise ValueError("cannot bag an empty granularity")
+    rng = np.random.default_rng(int(seed))
+    return rng.multinomial(total, live / live.sum()).astype(np.int32)
+
+
+def plar_reduce_ensemble(
+    x=None,
+    d=None,
+    *,
+    source=None,                         # Granularity | GranuleSource (alt. to x, d)
+    configs: Sequence,                   # per-config dicts (or measure names)
+    seeds: Optional[Sequence[int]] = None,  # bag grid: configs × seeds
+    chunk_rows: int = 65536,
+    n_dec: Optional[int] = None,
+    v_max: Optional[int] = None,
+    mode: str = "incremental",
+    backend: str = "segment",            # ENSEMBLE_BACKENDS
+    ladder: bool = False,                # requires backend="sweep_xla"
+    mp_chunk: int = 64,
+    grc_init: bool = True,
+    exact: bool = True,
+) -> List[ReductionResult]:
+    """A grid of PLAR reductions over ONE granularity in ONE engine dispatch.
+
+    Every config runs the same greedy selection :func:`plar_reduce` would —
+    per-config reducts and Θ histories are byte-identical to N sequential
+    runs (tests/test_ensemble.py) — but the grid shares a single XLA compile
+    and a single pass over the granule/candidate tiles per iteration
+    (DESIGN.md §3.8).  Per-config knobs: ``delta``, ``tol``, ``tie_tol``,
+    ``max_features``, ``shrink``, ``compute_core``, ``eps``, and ``seed``
+    (a bagged row-weight resample via :func:`bagged_weights`; the sequential
+    twin of config ``c`` is then ``plar_reduce`` on the same granularity
+    with ``w`` replaced).  Shared knobs (``mode``, ``backend``, ``ladder``,
+    ``mp_chunk``) are static trace choices.
+
+    Results come back in grid order (``configs`` × ``seeds``); ``elapsed_s``
+    is the per-config share of the total wall clock, and ``per_iteration_s``
+    entries are the loop average over every executed body in the grid.
+    """
+    t0 = time.perf_counter()
+    if mode not in _MODES:
+        raise ValueError(
+            f"unknown mode: {mode!r} (one of: {', '.join(_MODES)})")
+    if backend not in ENSEMBLE_BACKENDS:
+        raise ValueError(
+            f"ensemble backend must be one of {', '.join(ENSEMBLE_BACKENDS)}; "
+            f"got {backend!r} (run plar_reduce per config for host-only "
+            f"backends)")
+    cfgs = normalize_ensemble_configs(configs, seeds)
+    gran = resolve_granularity(
+        x, d, source=source, grc_init=grc_init, n_dec=n_dec, v_max=v_max,
+        exact=exact, chunk_rows=chunk_rows)
+
+    A = gran.n_attrs
+    m = gran.n_dec
+    cap = gran.capacity
+    C = len(cfgs)
+
+    # Θ(D|C) ids are w-independent — computed once for the whole grid; only
+    # the contingency reweights per config.
+    all_cols = jnp.arange(A, dtype=jnp.int32)
+    ids_c, _k = subset_ids(gran, all_cols, exact=exact)
+
+    base_w = np.asarray(gran.w, np.int32)
+    ws = np.zeros((C, cap), np.int32)
+    core_attrs = np.zeros((C, max(A, 1)), np.int32)
+    core_counts = np.zeros((C,), np.int32)
+    delta_idx = np.zeros((C,), np.int32)
+    theta_fulls = np.zeros((C,), np.float64)
+    ns = np.zeros((C,), np.int64)
+    cores: List[List[int]] = []
+    evals0 = np.zeros((C,), np.int64)
+
+    for j, c in enumerate(cfgs):
+        w_j = (bagged_weights(gran, c["seed"]) if c["seed"] is not None
+               else base_w)
+        n_j = int(np.where(np.asarray(gran.valid), w_j, 0).sum())
+        ws[j] = w_j
+        ns[j] = n_j
+        delta_idx[j] = ENSEMBLE_DELTAS.index(c["delta"])
+        cont_j = contingency_from_ids(
+            ids_c, gran.d, jnp.asarray(w_j), gran.valid, n_bins=cap, m=m)
+        theta_fulls[j] = float(
+            measures.evaluate(c["delta"], cont_j, jnp.int32(n_j)))
+
+        core_j: List[int] = []
+        if c["compute_core"]:
+            gran_j = gran if c["seed"] is None else dataclasses.replace(
+                gran, w=jnp.asarray(w_j), n_total=jnp.int32(n_j))
+            inner = _core_inner_thetas(gran_j, c["delta"], exact=exact)
+            sig = inner - theta_fulls[j]
+            core_j = [int(a) for a in range(A)
+                      if sig[a] > c["eps"] + c["tie_tol"]]
+            evals0[j] = A
+        cores.append(core_j)
+        core_attrs[j, : len(core_j)] = core_j
+        core_counts[j] = len(core_j)
+
+    ops = EnsembleOperands(
+        delta_idx=jnp.asarray(delta_idx),
+        tol=jnp.asarray([c["tol"] for c in cfgs], jnp.float32),
+        tie_tol=jnp.asarray([c["tie_tol"] for c in cfgs], jnp.float32),
+        max_sel=jnp.asarray(
+            [A if c["max_features"] is None else int(c["max_features"])
+             for c in cfgs], jnp.int32),
+        shrink=jnp.asarray([bool(c["shrink"]) for c in cfgs], bool),
+        theta_full=jnp.asarray(theta_fulls, jnp.float32),
+        n=jnp.asarray(ns, jnp.int32),
+        w=jnp.asarray(ws),
+        core_attrs=jnp.asarray(core_attrs),
+        core_count=jnp.asarray(core_counts),
+    )
+    runner = make_ensemble_run(
+        mode, backend, C, A, cap, m, gran.v_max, int(mp_chunk), bool(ladder))
+    fin, loop_s = run_ensemble(
+        runner, cap, A, gran.valid, gran.x, gran.d, ops)
+    per_cfg = unpack_ensemble_result(fin, core_counts)
+
+    elapsed = time.perf_counter() - t0
+    total_bodies = sum(len(r[0]) for r in per_cfg)
+    per_body = loop_s / total_bodies if total_bodies else 0.0
+    results = []
+    for j, (reduct, hist, iters, ev) in enumerate(per_cfg):
+        results.append(ReductionResult(
+            reduct=reduct,
+            core=cores[j],
+            theta_full=float(theta_fulls[j]),
+            theta_history=hist,
+            iterations=iters,
+            n_evaluations=int(evals0[j]) + ev,
+            elapsed_s=elapsed / C,
+            per_iteration_s=[per_body] * len(reduct),
+        ))
+    return results
 
 
 def sum_terms(x, cols: Sequence[int], seed: int):

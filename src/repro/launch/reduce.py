@@ -49,6 +49,14 @@ def main():
     ap.add_argument("--shrink", action="store_true",
                     help="FSPA universe shrinking (drop pure classes)")
     ap.add_argument("--mp-chunk", type=int, default=64)
+    ap.add_argument("--ensemble", default=None, metavar="MEASURES",
+                    help="comma-separated measure grid (or 'all' = "
+                         "PR,SCE,LCE,CCE) run as ONE stacked engine "
+                         "dispatch (DESIGN.md §3.8); --shrink/"
+                         "--max-features apply to every member")
+    ap.add_argument("--bags", type=int, default=None, metavar="N",
+                    help="with --ensemble: N bagged (bootstrap-reweighted) "
+                         "replicas per measure, seeds 0..N-1")
     ap.add_argument("--no-grc", action="store_true")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--mesh", default="4,2", help="data,model (distributed)")
@@ -86,6 +94,52 @@ def main():
         table_shape = list(x.shape)
 
     ladder = args.bin_ladder == "on"
+    if args.ensemble is not None:
+        from repro.core.engine import ENSEMBLE_BACKENDS
+        from repro.core.reduction import plar_reduce_ensemble
+
+        # refuse inapplicable knobs rather than silently ignoring them
+        dropped = [name for name, off_default in [
+            ("--distributed", args.distributed),
+            ("--engine", args.engine == "host"),
+            ("--backend", args.backend not in ENSEMBLE_BACKENDS),
+            ("--delta", args.delta != "SCE"),  # the grid IS the measure knob
+        ] if off_default]
+        if dropped:
+            ap.error(f"{', '.join(dropped)} not supported with --ensemble "
+                     f"(stacked engine backends: "
+                     f"{', '.join(ENSEMBLE_BACKENDS)}; measures go in the "
+                     f"--ensemble list)")
+        measures_ = (["PR", "SCE", "LCE", "CCE"] if args.ensemble == "all"
+                     else [s.strip() for s in args.ensemble.split(",")])
+        configs = [{"delta": dd, "shrink": args.shrink,
+                    "max_features": args.max_features} for dd in measures_]
+        seeds = None if args.bags is None else list(range(args.bags))
+        rs = plar_reduce_ensemble(
+            x, d, source=source, chunk_rows=args.chunk_rows, configs=configs,
+            seeds=seeds, mode=args.mode, backend=args.backend, ladder=ladder,
+            mp_chunk=args.mp_chunk, grc_init=not args.no_grc)
+        grid = [{"delta": dd} if seeds is None else {"delta": dd, "seed": s}
+                for dd in measures_ for s in (seeds or [None])]
+        out = {
+            "dataset": args.dataset, "table_shape": table_shape,
+            "ensemble": [
+                {**g, "reduct": r.reduct, "core": r.core,
+                 "theta_full": r.theta_full, "iterations": r.iterations,
+                 "elapsed_s": round(r.elapsed_s, 3)}
+                for g, r in zip(grid, rs)],
+        }
+        if args.json:
+            print(json.dumps(out, indent=2))
+        else:
+            print(f"{'dataset':>14}: {out['dataset']}")
+            print(f"{'table_shape':>14}: {out['table_shape']}")
+            for e in out["ensemble"]:
+                tag = e["delta"] + (f"/bag{e['seed']}" if "seed" in e else "")
+                print(f"{tag:>14}: reduct={e['reduct']} "
+                      f"theta_full={e['theta_full']:.6f}")
+        return
+
     if args.distributed:
         # the mesh driver has no mode/shrink knobs and only the mesh-capable
         # Θ backends — refuse rather than silently ignoring them

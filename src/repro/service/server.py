@@ -19,7 +19,11 @@ Operations:
   unchanged content is a dictionary hit, a changed fingerprint falls
   through to the handle's warm validate-and-repair path (state.py), and a
   merge evicts the dataset's superseded-fingerprint entries (they can
-  never hit again), keeping the cache bounded by live content.
+  never hit again), keeping the cache bounded by live content;
+* ``query_ensemble(name, configs, seeds=..., **shared)`` — a whole config
+  grid in one stacked engine dispatch (DESIGN.md §3.8), cached per config
+  under the same key shape: only the grid's cache *misses* are re-run (as
+  a smaller stacked grid).
 
 The worker is deliberately single-flight: JAX dispatch is serialized anyway,
 and one worker makes the coalescing window well-defined (everything buffered
@@ -35,7 +39,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.reduction import ReductionResult
+from repro.core.reduction import ReductionResult, expand_ensemble_grid
 
 from .state import DatasetHandle
 
@@ -56,6 +60,9 @@ class ReduceRequest:
     delta: str
     params: Tuple[Tuple[str, Any], ...]
     future: asyncio.Future
+    # ensemble queries: the expanded config grid (sorted-items tuples);
+    # None marks a single-config query
+    configs: Optional[Tuple[Tuple[Tuple[str, Any], ...], ...]] = None
     # filled by the worker:
     cached: bool = False
     warm: bool = False
@@ -80,7 +87,8 @@ class ReductServer:
         self.requests: Deque[ReduceRequest] = collections.deque(
             maxlen=_REQUEST_LOG)
         self.stats = {"queries": 0, "cache_hits": 0, "warm": 0, "cold": 0,
-                      "merges": 0, "updates": 0, "coalesced_batches": 0}
+                      "merges": 0, "updates": 0, "coalesced_batches": 0,
+                      "ensemble_queries": 0, "ensemble_configs": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -153,6 +161,31 @@ class ReductServer:
         await self._queue.put(req)
         return await req.future
 
+    async def query_ensemble(self, name: str, configs, *, seeds=None,
+                             **shared) -> List[ReductionResult]:
+        """A whole config grid for the dataset's current content, served by
+        ONE stacked engine dispatch (DESIGN.md §3.8).
+
+        Pending updates drain first, exactly like :meth:`query`.  Each
+        member is cached individually under ``(dataset, fingerprint, delta,
+        params)`` — a repeat grid on unchanged content is C dictionary hits,
+        a partially-cached grid re-runs only the missing configs (as a
+        smaller stacked grid), and results come back in grid order
+        (``configs`` × ``seeds``).
+        """
+        self._require(name)
+        if self._queue is None:
+            raise RuntimeError("server not started (use 'async with' or start())")
+        grid = expand_ensemble_grid(configs, seeds)
+        self._rid += 1
+        req = ReduceRequest(
+            rid=self._rid, dataset=name, delta="<ensemble>",
+            params=tuple(sorted(shared.items())),
+            configs=tuple(tuple(sorted(c.items())) for c in grid),
+            future=asyncio.get_running_loop().create_future())
+        await self._queue.put(req)
+        return await req.future
+
     def handle(self, name: str) -> DatasetHandle:
         return self._require(name)
 
@@ -198,20 +231,59 @@ class ReductServer:
                      if k[0] == req.dataset and k[1] != fp]
             for k in stale:
                 del self._cache[k]
-        key = (req.dataset, handle.fingerprint, req.delta, req.params)
         self.stats["queries"] += 1
-        hit = self._cache.get(key)
-        if hit is not None:
-            req.cached = True
-            self.stats["cache_hits"] += 1
-            result = hit
+        if req.configs is not None:
+            result = self._process_ensemble(req, handle)
         else:
-            result = handle.reduce(req.delta, **dict(req.params))
-            self._cache[key] = result
-            req.warm = handle.last_was_warm
-            req.prefix_kept = handle.last_prefix_kept
-            self.stats["warm" if req.warm else "cold"] += 1
+            key = (req.dataset, handle.fingerprint, req.delta, req.params)
+            hit = self._cache.get(key)
+            if hit is not None:
+                req.cached = True
+                self.stats["cache_hits"] += 1
+                result = hit
+            else:
+                result = handle.reduce(req.delta, **dict(req.params))
+                self._cache[key] = result
+                req.warm = handle.last_was_warm
+                req.prefix_kept = handle.last_prefix_kept
+                self.stats["warm" if req.warm else "cold"] += 1
         req.merged_batches = len(batches)
         req.latency_s = time.perf_counter() - t0
         self.requests.append(req)
         return result
+
+    def _process_ensemble(self, req: ReduceRequest,
+                          handle: DatasetHandle) -> List[ReductionResult]:
+        """Serve a config grid: per-config cache probes, then one stacked
+        run for exactly the missing configs."""
+        shared = dict(req.params)
+        fp = handle.fingerprint
+        self.stats["ensemble_queries"] += 1
+        self.stats["ensemble_configs"] += len(req.configs)
+
+        grid = [dict(items) for items in req.configs]
+        keys = []
+        for c in grid:
+            delta = c.get("delta", "PR")
+            params = {**shared,
+                      **{k: v for k, v in c.items() if k != "delta"}}
+            keys.append((req.dataset, fp, delta, tuple(sorted(params.items()))))
+
+        results: List[Optional[ReductionResult]] = []
+        misses: List[int] = []
+        for j, key in enumerate(keys):
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+            else:
+                misses.append(j)
+            results.append(hit)
+        if misses:
+            fresh = handle.reduce_ensemble(
+                [grid[j] for j in misses], **shared)
+            for j, r in zip(misses, fresh):
+                self._cache[keys[j]] = r
+                results[j] = r
+            self.stats["cold"] += len(misses)
+        req.cached = not misses
+        return results

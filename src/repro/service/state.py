@@ -39,7 +39,13 @@ import numpy as np
 
 from repro.core.granularity import Granularity, fold_chunk, row_fingerprints
 from repro.core.measures import f32_threshold
-from repro.core.reduction import ReductionResult, plar_reduce, resolve_granularity
+from repro.core.reduction import (
+    ReductionResult,
+    expand_ensemble_grid,
+    plar_reduce,
+    plar_reduce_ensemble,
+    resolve_granularity,
+)
 
 __all__ = [
     "DatasetHandle",
@@ -257,3 +263,41 @@ class DatasetHandle:
             self.last_was_warm = False
         self._results[key] = r
         return r
+
+    @staticmethod
+    def ensemble_result_key(config: dict, shared: dict) -> tuple:
+        """The ``_results`` key an ensemble member is stored under.
+
+        Built from the *explicitly provided* per-config fields (defaults not
+        filled in) merged over the shared driver kwargs — the same shape
+        :meth:`reduce` keys with, so ``reduce(delta, **same_params)`` later
+        warm-starts from the matching ensemble member.  Bagged members carry
+        their ``seed`` in the key and therefore never collide with unbagged
+        reductions.
+        """
+        delta = config.get("delta", "PR")
+        params = {**shared, **{k: v for k, v in config.items() if k != "delta"}}
+        return (delta, tuple(sorted(params.items())))
+
+    def reduce_ensemble(self, configs, *, seeds=None,
+                        **shared) -> "list[ReductionResult]":
+        """A whole config grid over the current granularity in one stacked
+        engine dispatch (:func:`~repro.core.reduction.plar_reduce_ensemble`).
+
+        ``configs``/``seeds`` follow the driver's grid semantics (configs ×
+        bag seeds); ``shared`` kwargs (``backend``, ``ladder``, ``mode``,
+        per-config defaults like ``tol``) go to the driver, with the
+        handle's ``exact`` mode riding along like :meth:`reduce`.  Every
+        member lands in the per-config result table under
+        :meth:`ensemble_result_key`, so later single-config ``reduce``
+        calls with matching params warm-start from it.
+        """
+        shared = {"exact": self.exact, **shared}
+        grid = expand_ensemble_grid(configs, seeds)
+        results = plar_reduce_ensemble(
+            source=self.gran, configs=grid, **shared)
+        for c, r in zip(grid, results):
+            self._results[self.ensemble_result_key(c, shared)] = r
+        self.last_prefix_kept = 0
+        self.last_was_warm = False
+        return results

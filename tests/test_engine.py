@@ -288,6 +288,14 @@ def test_warm_start_validation():
         plar_reduce(x, d, warm_start=[0, 7])
     with pytest.raises(ValueError, match="out of range"):
         plar_reduce(x, d, warm_start=[-1])
+    with pytest.raises(ValueError, match="integral"):
+        plar_reduce(x, d, warm_start=[0.5])
+    with pytest.raises(ValueError, match="max_features"):
+        # a warm prefix longer than the feature cap can never be valid
+        plar_reduce(x, d, warm_start=[0, 1, 2], max_features=2)
+    # boundary: prefix length == max_features is allowed (pure re-eval)
+    r = plar_reduce(x, d, warm_start=[0, 1], max_features=2)
+    assert r.reduct == [0, 1]
 
 
 def test_engine_factory_cache_key():

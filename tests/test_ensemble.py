@@ -1,0 +1,240 @@
+"""Batched multi-config engine (DESIGN.md §3.8): parity, compile count, API.
+
+The acceptance contract: a stacked N-config run returns byte-identical
+per-config reducts and Θ histories to N independent ``plar_reduce`` runs —
+across measures, shrink, feature caps, tolerances, bagged seeds, spark mode,
+and every ensemble backend — while the whole grid is exactly ONE XLA
+compile (one ``lax.while_loop`` trace).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    ENSEMBLE_BACKENDS,
+    bagged_weights,
+    expand_ensemble_grid,
+    make_ensemble_run,
+    normalize_ensemble_configs,
+    plar_reduce,
+    plar_reduce_ensemble,
+    resolve_granularity,
+)
+
+DELTAS = ["PR", "SCE", "LCE", "CCE"]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _free_compile_state():
+    """Drop this module's compiled executables when it finishes.
+
+    The parity matrix compiles dozens of large stacked-engine programs
+    (vmapped multi-config while_loops) on top of the sequential twins;
+    keeping them resident for the rest of the session pushes XLA:CPU's
+    JIT over the edge on long full-suite runs (observed as a segfault in
+    a *later* module's backend_compile).  The lru-cached runner factories
+    are cleared too so no handle to a freed executable survives.
+    """
+    yield
+    import jax
+
+    from repro.core import engine
+
+    engine._make_engine_run.cache_clear()
+    engine._make_engine_step.cache_clear()
+    engine._make_ensemble_run.cache_clear()
+    jax.clear_caches()
+
+
+def _table(rng, n, a, vmax=4, m=2, redundancy=0.5):
+    x = rng.integers(0, vmax, size=(n, a)).astype(np.int32)
+    for j in range(1, a):
+        if rng.random() < redundancy:
+            x[:, j] = x[:, rng.integers(0, j)]
+    d = rng.integers(0, m, size=(n,)).astype(np.int32)
+    return x, d
+
+
+def _assert_member(r_e, r_s):
+    assert r_e.reduct == r_s.reduct
+    assert r_e.theta_history == r_s.theta_history  # bit-identical floats
+    assert r_e.core == r_s.core
+    assert r_e.theta_full == r_s.theta_full
+    assert r_e.iterations == r_s.iterations
+    assert r_e.n_evaluations == r_s.n_evaluations
+
+
+# ---------------------------------------------------------------------------
+# parity matrix (the §3.8 contract)
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_mixed_grid_matches_sequential():
+    """One stacked dispatch over a grid mixing every per-config knob ==
+    the same configs run sequentially, member for member."""
+    rng = np.random.default_rng(7)
+    x, d = _table(rng, 300, 8, m=3)
+    grid = [
+        {"delta": "PR"},
+        {"delta": "SCE", "shrink": True},
+        {"delta": "LCE", "max_features": 3, "compute_core": False},
+        {"delta": "CCE", "tol": 1e-5},
+        {"delta": "PR", "shrink": True, "tie_tol": 1e-4},
+    ]
+    ens = plar_reduce_ensemble(x, d, configs=grid)
+    assert len(ens) == len(grid)
+    for c, r_e in zip(grid, ens):
+        r_s = plar_reduce(x, d, engine="device", **c)
+        _assert_member(r_e, r_s)
+
+
+@pytest.mark.parametrize("mode,backend,ladder", [
+    ("incremental", "segment", False),
+    ("incremental", "onehot", False),
+    ("incremental", "sweep_xla", False),
+    ("incremental", "sweep_xla", True),
+    ("spark", "segment", False),
+])
+def test_ensemble_backend_parity(mode, backend, ladder):
+    """Every ensemble backend (and the stacked ladder) matches its
+    sequential twin on the all-measures grid."""
+    rng = np.random.default_rng(13)
+    x, d = _table(rng, 250, 7, m=3)
+    ens = plar_reduce_ensemble(x, d, configs=DELTAS, mode=mode,
+                               backend=backend, ladder=ladder)
+    for dd, r_e in zip(DELTAS, ens):
+        r_s = plar_reduce(x, d, delta=dd, engine="device", mode=mode,
+                          backend=backend, ladder=ladder)
+        _assert_member(r_e, r_s)
+
+
+def test_ensemble_bagged_matches_reweighted_sequential():
+    """A ``seed`` config is a bootstrap reweighting of the shared
+    granularity: its sequential twin is ``plar_reduce`` on the same
+    granules with ``w`` replaced by :func:`bagged_weights`."""
+    rng = np.random.default_rng(29)
+    x, d = _table(rng, 280, 7, m=3)
+    gran = resolve_granularity(x, d)
+    seeds = [0, 1, 2]
+    ens = plar_reduce_ensemble(source=gran, configs=["SCE"], seeds=seeds)
+    for s, r_e in zip(seeds, ens):
+        w_s = bagged_weights(gran, s)
+        assert int(w_s.sum()) == int(gran.n_total)  # total mass preserved
+        twin = dataclasses.replace(gran, w=jnp.asarray(w_s),
+                                   n_total=jnp.int32(int(w_s.sum())))
+        r_s = plar_reduce(source=twin, delta="SCE", engine="device")
+        _assert_member(r_e, r_s)
+
+
+def test_ensemble_single_compile():
+    """The whole grid is ONE jit trace, and a second grid on different
+    same-shape data adds zero traces — the §3.8 acceptance criterion."""
+    rng = np.random.default_rng(23)
+    n, a, vmax, m = 160, 8, 3, 2
+    grid = [{"delta": dd, "shrink": s} for dd in DELTAS for s in (False, True)]
+    x1, d1 = _table(rng, n, a, vmax=vmax, m=m)
+    x2, d2 = _table(rng, n, a, vmax=vmax, m=m)
+    # pin v_max/n_dec so both tables resolve to the same static config
+    for x, d in ((x1, d1), (x2, d2)):
+        x[0, :] = vmax - 1
+        d[0] = m - 1
+    # grc_init=False ⇒ capacity == n exactly, so the engine-cache key is known
+    rs1 = plar_reduce_ensemble(x1, d1, configs=grid, grc_init=False)
+    runner = make_ensemble_run("incremental", "segment", len(grid), a, n, m,
+                               vmax, 64, False)
+    assert runner._cache_size() == 1          # one trace for the whole grid
+    rs2 = plar_reduce_ensemble(x2, d2, configs=grid, grc_init=False)
+    assert runner._cache_size() == 1          # warm rerun: zero new traces
+    for (x, d), rs in (((x1, d1), rs1), ((x2, d2), rs2)):
+        for c, r_e in zip(grid, rs):
+            _assert_member(r_e, plar_reduce(x, d, engine="device",
+                                            grc_init=False, **c))
+
+
+# ---------------------------------------------------------------------------
+# grid semantics + validation
+# ---------------------------------------------------------------------------
+
+
+def test_expand_ensemble_grid_order_and_seeds():
+    grid = expand_ensemble_grid(["PR", {"delta": "SCE", "shrink": True}],
+                                seeds=[4, 9])
+    # configs outer, seeds inner; bare measure name → {"delta": name}
+    assert grid == [
+        {"delta": "PR", "seed": 4}, {"delta": "PR", "seed": 9},
+        {"delta": "SCE", "shrink": True, "seed": 4},
+        {"delta": "SCE", "shrink": True, "seed": 9},
+    ]
+    assert expand_ensemble_grid(["LCE"]) == [{"delta": "LCE"}]
+
+
+def test_ensemble_validation_errors():
+    rng = np.random.default_rng(5)
+    x, d = _table(rng, 60, 4)
+    with pytest.raises(ValueError, match="non-empty"):
+        plar_reduce_ensemble(x, d, configs=[])
+    with pytest.raises(ValueError, match="unknown measure"):
+        plar_reduce_ensemble(x, d, configs=["XXX"])
+    with pytest.raises(ValueError, match="unknown ensemble config keys"):
+        plar_reduce_ensemble(x, d, configs=[{"delta": "PR", "bogus": 1}])
+    with pytest.raises(ValueError, match="seed"):
+        # per-config seed and a seeds= grid are mutually exclusive
+        normalize_ensemble_configs([{"delta": "PR", "seed": 3}], seeds=[1])
+    with pytest.raises(ValueError, match="backend"):
+        plar_reduce_ensemble(x, d, configs=["PR"], backend="fused_xla")
+    with pytest.raises(ValueError, match="sweep_xla"):
+        # stacked ladder shares one rung across configs — sweep_xla only
+        plar_reduce_ensemble(x, d, configs=["PR"], backend="segment",
+                             ladder=True)
+    assert "fused_xla" not in ENSEMBLE_BACKENDS
+
+
+# ---------------------------------------------------------------------------
+# service layer
+# ---------------------------------------------------------------------------
+
+
+def test_handle_reduce_ensemble_members_match_direct():
+    """DatasetHandle.reduce_ensemble == the driver on the handle's
+    granularity, and members land in the handle's result cache."""
+    from repro.service import DatasetHandle
+
+    rng = np.random.default_rng(17)
+    x, d = _table(rng, 300, 8, m=3)
+    h = DatasetHandle.create(x, d, n_dec=3, v_max=4)
+    configs = [{"delta": dd} for dd in DELTAS]
+    rs = h.reduce_ensemble(configs)
+    direct = plar_reduce_ensemble(source=h.gran, configs=configs)
+    for r_h, r_d in zip(rs, direct):
+        _assert_member(r_h, r_d)
+
+
+def test_server_query_ensemble_cache_and_stats():
+    """query_ensemble: cold grid → C cold configs; repeat → pure cache hit;
+    overlapping grid → only the new configs re-run (as a smaller grid)."""
+    import asyncio
+
+    from repro.service import ReductServer
+
+    rng = np.random.default_rng(31)
+    x, d = _table(rng, 240, 7, m=3)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("t", x, d, n_dec=3, v_max=4)
+            r1 = await srv.query_ensemble("t", ["PR", "SCE"])
+            r2 = await srv.query_ensemble("t", ["PR", "SCE"])
+            r3 = await srv.query_ensemble("t", ["PR", "SCE", "LCE"])
+            return r1, r2, r3, dict(srv.stats), list(srv.requests)
+
+    r1, r2, r3, stats, reqs = asyncio.run(drive())
+    assert [r.reduct for r in r1] == [r.reduct for r in r2]
+    assert [r.reduct for r in r3[:2]] == [r.reduct for r in r1]
+    assert stats["ensemble_queries"] == 3
+    assert stats["ensemble_configs"] == 7
+    assert stats["cold"] == 3            # PR, SCE once + LCE once
+    assert stats["cache_hits"] == 4      # r2's two + r3's two
+    assert not reqs[0].cached and reqs[1].cached and not reqs[2].cached

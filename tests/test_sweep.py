@@ -59,6 +59,41 @@ def test_ladder_rungs_properties():
     assert ladder_rungs(4096) == (256, 512, 1024, 2048, 4096)
 
 
+def test_ladder_rung_boundaries():
+    """Boundary pins for the rung math: k·v_max exactly on a rung edge, the
+    top rung, v_max == 1, and host/device selection agreement there."""
+    from types import SimpleNamespace
+
+    from repro.core.engine import _rung_index
+    from repro.core.plan import rung_for
+
+    rungs = ladder_rungs(1024)
+    assert rungs == (256, 512, 1024)
+    # exact tile boundary: k·v_max == 256 stays on the first rung, +1 spills
+    assert rung_for(64, 4, rungs) == 256
+    assert rung_for(65, 4, rungs) == 512
+    # top boundary: k·v_max == the exact full bound still succeeds (k ≤ cap)
+    assert rung_for(256, 4, rungs) == 1024
+    assert rung_for(1024, 1, rungs) == 1024
+    # v_max == 1: need degenerates to k itself
+    assert rung_for(256, 1, rungs) == 256
+    assert rung_for(257, 1, rungs) == 512
+    # k == 0 (empty selection) clamps to one bin's worth, never underflows
+    assert rung_for(0, 3, rungs) == 256
+    # non-tile-multiple top rung: first-rung boundary still exact
+    assert ladder_rungs(300) == (256, 300)
+    assert rung_for(64, 4, (256, 300)) == 256
+    assert rung_for(65, 4, (256, 300)) == 300
+    # tiny tables: the single rung is the exact bound
+    assert ladder_rungs(1) == (1,)
+    assert rung_for(1, 1, (1,)) == 1
+    # the device twin picks the same rung at every boundary k
+    cfg = SimpleNamespace(v_max=4, rungs=rungs)
+    for k in [1, 63, 64, 65, 128, 129, 255, 256]:
+        want = rungs.index(rung_for(k, 4, rungs))
+        assert int(_rung_index(cfg, jnp.int32(k))) == want
+
+
 def test_sweep_xla_bitwise_invariant_across_rungs():
     """The ladder's parity lemma: sweep_xla thetas are bit-identical at every
     rung ≥ K·V — dropped trailing tiles are exact f32 zeros in tile order."""
