@@ -1,0 +1,190 @@
+"""Roofline-driven tile selection + dispatch-bound tier (DESIGN.md §5.2).
+
+Two sections, snapshotted by ``python -m benchmarks.run --preset autotune`` →
+``benchmarks/BENCH_autotune.json``:
+
+* ``autotune_tile_selection`` — what each selector mode picks per kernel per
+  shape regime, the analytic pick's modeled time, and (on the single-grid-step
+  validation shapes) the modeled-vs-``cost_analysis()`` byte ratio — the same
+  agreement tests/test_kernel_cost_model.py asserts, kept visible in the perf
+  trajectory.
+* ``autotune_dispatch_bound`` — the benchmark tier the cost model's
+  ``GRID_STEP_OVERHEAD_S`` term exists for: a tiny-granule table (a few dozen
+  granules after GrC init) where per-iteration wall clock is dominated by
+  engine/dispatch overhead rather than kernel compute, against a
+  granule-heavy compute-bound contrast.  Reported columns separate the two:
+  ``modeled_kernel_ms`` is the roofline bound of the per-iteration candidate
+  sweep, ``engine_overhead_ms`` the measured remainder.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .engine_bench import _dense_table, _latent_table
+
+# (label, nc, g, n_bins, m, v_max) — the tile-selection shape regimes
+_SHAPES = [
+    ("tiny", 2, 300, 40, 3, 2),
+    ("mid", 8, 3000, 1024, 8, 2),
+    ("wide", 64, 8192, 4096, 16, 4),
+]
+
+# single-grid-step validation shapes (XLA counts a while body once, so only
+# one-step grids compare exactly — the tests/test_kernel_cost_model.py matrix)
+_VALIDATION = [
+    ("contingency", 1, 1024, 8, 128, (8, 1024), 1, None),
+    ("fused", 1, 1024, 8, 128, (8, 1024), 1, "SCE"),
+    ("sweep", 1, 1024, 8, 128, (1, 8, 1024), 2, "SCE"),
+]
+
+
+def _measured_cost(kernel, nc, g, nb, m, tiles, v_max, delta):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    wd = jnp.zeros((g, m), jnp.float32).at[
+        jnp.arange(g), jnp.asarray(rng.integers(0, m, (g,)))].set(1.0)
+    if kernel == "contingency":
+        from repro.kernels.contingency.kernel import contingency_pallas
+
+        packed = jnp.asarray(rng.integers(0, nb, (nc, g)), jnp.int32)
+        low = contingency_pallas.lower(packed, wd, n_bins=nb, bk=tiles[0],
+                                       bg=tiles[1], interpret=True)
+    elif kernel == "fused":
+        from repro.kernels.contingency.fused import fused_theta_pallas
+
+        packed = jnp.asarray(rng.integers(0, nb, (nc, g)), jnp.int32)
+        low = fused_theta_pallas.lower(packed, wd, n_bins=nb, delta=delta,
+                                       bk=tiles[0], bg=tiles[1],
+                                       interpret=True)
+    else:
+        from repro.kernels.contingency.sweep import sweep_theta_pallas
+
+        x_t = jnp.asarray(rng.integers(0, v_max, (nc, g)), jnp.int32)
+        r_ids = jnp.asarray(
+            rng.integers(0, max(nb // v_max, 1), (g,)), jnp.int32)
+        low = sweep_theta_pallas.lower(x_t, r_ids, wd, v_max=v_max, n_bins=nb,
+                                       delta=delta, bc=tiles[0], bk=tiles[1],
+                                       bg=tiles[2], interpret=True)
+    ca = low.compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def autotune_tile_selection() -> List[Dict]:
+    """Per-selector tile picks + analytic model agreement with XLA."""
+    from repro.kernels.contingency.autotune import resolve_tiles
+    from repro.kernels.contingency.model import kernel_cost, modeled_time_s
+
+    rows = []
+    for label, nc, g, nb, m, v_max in _SHAPES:
+        m_pad = -(-m // 128) * 128
+        for kernel in ("contingency", "fused", "sweep"):
+            picks = {
+                sel: resolve_tiles(kernel, nc=nc, g=g, n_bins=nb, m=m_pad,
+                                   v_max=v_max, selector=sel)
+                for sel in ("heuristic", "analytic", "pinned")
+            }
+            cost = kernel_cost(kernel, nc, g, nb, m_pad, picks["analytic"],
+                               v_max=v_max)
+            rows.append({
+                "shape": label, "kernel": kernel,
+                "heuristic": "x".join(map(str, picks["heuristic"])),
+                "analytic": "x".join(map(str, picks["analytic"])),
+                "pinned": "x".join(map(str, picks["pinned"])),
+                "modeled_ms": round(modeled_time_s(cost) * 1e3, 4),
+                "modeled_MB": round(cost.hbm_bytes / 1e6, 2),
+                "grid_steps": cost.grid_steps,
+            })
+
+    # model-vs-XLA agreement on the single-step validation shapes
+    from repro.kernels.contingency.model import kernel_cost as kc
+
+    for kernel, nc, g, nb, m, tiles, v_max, delta in _VALIDATION:
+        cost = kc(kernel, nc, g, nb, m, tiles, v_max=v_max,
+                  delta=delta or "SCE")
+        flops_x, bytes_x = _measured_cost(kernel, nc, g, nb, m, tiles,
+                                          v_max, delta or "SCE")
+        rows.append({
+            "shape": "validate", "kernel": kernel,
+            "heuristic": "-", "analytic": "x".join(map(str, tiles)),
+            "pinned": "-",
+            "modeled_ms": round(modeled_time_s(cost) * 1e3, 4),
+            "modeled_MB": round(cost.hbm_bytes / 1e6, 2),
+            "grid_steps": cost.grid_steps,
+            "flops_ratio": round(cost.flops / flops_x, 3) if flops_x else None,
+            "bytes_ratio": round(cost.hbm_bytes / bytes_x, 3) if bytes_x else None,
+        })
+    return rows
+
+
+def autotune_dispatch_bound() -> List[Dict]:
+    """Per-iteration wall clock vs modeled kernel compute, two regimes.
+
+    ``tiny_granule`` is the dispatch-bound tier: 20k rows collapse to a few
+    dozen granules, so one greedy iteration moves kilobytes — the while_loop
+    body's fixed costs (dispatch, argmin, state carry) dominate and
+    ``engine_overhead_ms`` ≈ the whole iteration.  ``dense_granule`` is the
+    compute-bound contrast (every row its own granule).
+    """
+    from repro.core import plar_reduce
+    from repro.core.granularity import build_granularity, next_pow2
+    from repro.kernels.contingency.model import (
+        kernel_cost,
+        modeled_time_s,
+        select_tiles,
+    )
+
+    shapes = [
+        ("tiny_granule", *_latent_table(20000, 32, 4, 3, seed=11), 3),
+        ("dense_granule", *_dense_table(4000, 16, 3, seed=13), 3),
+    ]
+    rows = []
+    for label, x, d, vmax in shapes:
+        n, a = x.shape
+        gran = build_granularity(x, d, n_dec=2, v_max=vmax)
+        cap = next_pow2(max(int(gran.num), 16))
+        m_pad = 128  # lane-padded decision axis
+        nb = cap * vmax
+
+        def run():
+            return plar_reduce(x, d, delta="SCE", backend="sweep_xla",
+                               engine="device", ladder=True,
+                               selector="analytic")
+
+        r = run()                       # warm the compile
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            r = run()
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        per_iter_ms = best / max(len(r.reduct), 1) * 1e3
+
+        # modeled per-iteration candidate sweep at the analytic tiles — the
+        # kernel-compute share of one iteration
+        tiles = select_tiles("sweep", a, cap, nb, m_pad, v_max=vmax)
+        cost = kernel_cost("sweep", a, cap, nb, m_pad, tiles, v_max=vmax)
+        modeled_ms = modeled_time_s(cost) * 1e3
+        rows.append({
+            "table": label, "rows": n, "attrs": a,
+            "granules": int(gran.num), "cap": cap,
+            "iterations": len(r.reduct),
+            "per_iter_ms": round(per_iter_ms, 3),
+            "modeled_kernel_ms": round(modeled_ms, 4),
+            "engine_overhead_ms": round(max(per_iter_ms - modeled_ms, 0.0), 3),
+            "overhead_frac": round(
+                max(per_iter_ms - modeled_ms, 0.0) / per_iter_ms, 3)
+            if per_iter_ms else None,
+        })
+    return rows
+
+
+ALL_AUTOTUNE_BENCHES = {
+    "autotune_tile_selection": autotune_tile_selection,
+    "autotune_dispatch_bound": autotune_dispatch_bound,
+}

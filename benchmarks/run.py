@@ -36,10 +36,12 @@ PRESETS = {
     "ingest": ["ingest_stream_vs_monolithic"],
     "sweep": ["sweep_ladder_speedup"],
     "service": ["service_incremental_vs_recompute"],
+    "autotune": ["autotune_tile_selection", "autotune_dispatch_bound"],
 }
 
 
 def main() -> None:
+    from .autotune_bench import ALL_AUTOTUNE_BENCHES
     from .engine_bench import ALL_ENGINE_BENCHES
     from .ensemble_bench import ALL_ENSEMBLE_BENCHES
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
@@ -74,7 +76,7 @@ def main() -> None:
     wanted = argv or None
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
             **ALL_ENSEMBLE_BENCHES, **ALL_INGEST_BENCHES,
-            **ALL_SERVICE_BENCHES}
+            **ALL_SERVICE_BENCHES, **ALL_AUTOTUNE_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:

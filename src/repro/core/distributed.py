@@ -219,7 +219,7 @@ def _advance_step(mesh: Mesh, delta: str, n_bins: int, m: int, v_max: int):
 def _engine_run_mesh(mesh: Mesh, delta: str, n_attrs: int, cap: int, m: int,
                      v_max: int, tol: float, tie_tol: float, collective: str,
                      max_sel: int, backend: str = "segment",
-                     ladder: bool = False):
+                     ladder: bool = False, selector: str = "analytic"):
     """The device-resident greedy core (engine.py) wrapped in ``shard_map``.
 
     One jitted while_loop runs the entire reduction: granules stay sharded
@@ -243,7 +243,7 @@ def _engine_run_mesh(mesh: Mesh, delta: str, n_attrs: int, cap: int, m: int,
     # packed-id bound K·V ≤ cap·V must cover all shards together.  The MP
     # level on the mesh is the 'model' axis itself, so mp_chunk is inert.
     cfg = _Cfg(delta, "incremental", backend, n_attrs, cap, m, v_max,
-               tol, tie_tol, False, max_sel, n_attrs, ladder)
+               tol, tie_tol, False, max_sel, n_attrs, ladder, selector)
 
     def local(st, x, d, w, n, theta_full, core_attrs, core_count):
         coll = _MeshColl(daxes, nd, has_model)
@@ -476,6 +476,7 @@ def plar_reduce_distributed(
     collective: str = "all_reduce",     # | "reduce_scatter" | "fused" (§Perf)
     backend: str = "segment",           # | "sweep_xla" (read-once slab, §5.3)
     ladder: bool = False,               # K-adaptive bin ladder (§5.3)
+    selector: str = "analytic",         # tile/rung selection mode
     compute_core: bool = True,
     grc_init: bool = True,
     engine: str = "auto",               # "device" while_loop | "host" legacy loop
@@ -493,6 +494,11 @@ def plar_reduce_distributed(
     if engine not in ("auto", "host", "device"):
         raise ValueError(
             f"unknown engine: {engine!r} (one of: auto, host, device)")
+    from repro.kernels.contingency.autotune import SELECTOR_MODES
+    if selector not in SELECTOR_MODES:
+        raise ValueError(
+            f"unknown selector: {selector!r} "
+            f"(one of: {', '.join(SELECTOR_MODES)})")
     if engine == "device" and collective == "fused":
         raise ValueError(
             "engine='device' cannot run the 'fused' collective: its class "
@@ -585,7 +591,7 @@ def plar_reduce_distributed(
         max_sel = int(max_features) if max_features is not None else A
         runner = _engine_run_mesh(
             mesh, delta, A, cap, n_dec, v_max, float(tol), float(tie_tol),
-            collective, max_sel, backend, bool(ladder))
+            collective, max_sel, backend, bool(ladder), str(selector))
         reduct, theta_hist, iterations, ev, per_iter = run_engine(
             runner, cap, A, gvalid, gx, gd, gw, n, theta_full, core)
         return ReductionResult(
@@ -606,7 +612,9 @@ def plar_reduce_distributed(
     theta_hist: List[float] = []
     per_iter_s: List[float] = []
 
-    rungs = ladder_rungs(cap * v_max)
+    # Same (cap, m)-only pruning as the single-process drivers — the mesh
+    # host loop lands on the identical rung set (§5.3 byte parity).
+    rungs = ladder_rungs(cap * v_max, selector=selector, g=cap, m=n_dec)
 
     def adv_bins_for(k_):
         # The advance bound is ladder-independent (the §5.3 ladder shrinks

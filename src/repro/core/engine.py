@@ -190,6 +190,7 @@ class _Cfg:
     max_sel: int         # max_features, or n_attrs when unbounded
     mp_chunk: int        # candidates evaluated per inner step (memory bound)
     ladder: bool = False  # K-adaptive bin ladder for the eval sweep (§5.3)
+    selector: str = "heuristic"  # ladder-rung choice: heuristic|analytic|pinned
 
     @property
     def n_bins(self) -> int:
@@ -203,7 +204,11 @@ class _Cfg:
         # The static bucket set the eval sweep selects from per iteration
         # when ``ladder`` is on; the top rung is the full n_bins bound, so
         # the ladder-off path is exactly the degenerate one-rung ladder.
-        return ladder_rungs(self.n_bins)
+        # ``selector="analytic"`` prunes the pow2 set by the modeled
+        # padding-vs-traffic tradeoff — a function of (cap, m) only, so the
+        # host loop and mesh driver derive the identical set (§5.3 parity).
+        return ladder_rungs(self.n_bins, selector=self.selector,
+                            g=self.cap, m=self.m)
 
 
 # ---------------------------------------------------------------------------
@@ -504,7 +509,7 @@ def _make_cond_body(cfg: _Cfg, coll, eval_thetas, x, d, w, n, theta_full,
 def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
                      cap: int, m: int, v_max: int, tol: float, tie_tol: float,
                      shrink: bool, max_sel: int, mp_chunk: int = 64,
-                     ladder: bool = False):
+                     ladder: bool = False, selector: str = "analytic"):
     """One jitted greedy iteration (evaluate → argmin → advance).
 
     Exposed for inspection/benchmarks; ``make_engine_run`` inlines the same
@@ -517,14 +522,15 @@ def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
     return _make_engine_step(str(delta), str(mode), str(backend),
                              int(n_attrs), int(cap), int(m), int(v_max),
                              float(tol), float(tie_tol), bool(shrink),
-                             int(max_sel), int(mp_chunk), bool(ladder))
+                             int(max_sel), int(mp_chunk), bool(ladder),
+                             str(selector))
 
 
 @lru_cache(maxsize=None)
 def _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max, tol,
-                      tie_tol, shrink, max_sel, mp_chunk, ladder):
+                      tie_tol, shrink, max_sel, mp_chunk, ladder, selector):
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
-               shrink, max_sel, mp_chunk, ladder)
+               shrink, max_sel, mp_chunk, ladder, selector)
 
     @jax.jit
     def step(st: SelectionState, x, d, w, n, theta_full, core_attrs,
@@ -542,21 +548,22 @@ def _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max, tol,
 def make_engine_run(delta: str, mode: str, backend: str, n_attrs: int,
                     cap: int, m: int, v_max: int, tol: float, tie_tol: float,
                     shrink: bool, max_sel: int, mp_chunk: int = 64,
-                    ladder: bool = False):
+                    ladder: bool = False, selector: str = "analytic"):
     """The full reduction as one ``lax.while_loop`` (single-process)."""
     # same key normalization as make_engine_step (one lru entry per logical
     # config regardless of call style or numpy scalar types)
     return _make_engine_run(str(delta), str(mode), str(backend),
                             int(n_attrs), int(cap), int(m), int(v_max),
                             float(tol), float(tie_tol), bool(shrink),
-                            int(max_sel), int(mp_chunk), bool(ladder))
+                            int(max_sel), int(mp_chunk), bool(ladder),
+                            str(selector))
 
 
 @lru_cache(maxsize=None)
 def _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max, tol,
-                     tie_tol, shrink, max_sel, mp_chunk, ladder):
+                     tie_tol, shrink, max_sel, mp_chunk, ladder, selector):
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
-               shrink, max_sel, mp_chunk, ladder)
+               shrink, max_sel, mp_chunk, ladder, selector)
 
     @jax.jit
     def run(st: SelectionState, x, d, w, n, theta_full, core_attrs,
@@ -754,6 +761,7 @@ class _EnsCfg:
     v_max: int
     mp_chunk: int
     ladder: bool = False
+    selector: str = "heuristic"
 
     @property
     def n_bins(self) -> int:
@@ -761,7 +769,8 @@ class _EnsCfg:
 
     @property
     def rungs(self):
-        return ladder_rungs(self.n_bins)
+        return ladder_rungs(self.n_bins, selector=self.selector,
+                            g=self.cap, m=self.m)
 
 
 def _theta_switch(delta_idx, cont, n):
@@ -835,7 +844,7 @@ def _eval_ensemble_one(cfg: _EnsCfg, x, x_t, d, nb, st_c, w_c, n_c, delta_idx):
 
 def make_ensemble_run(mode: str, backend: str, n_cfgs: int, n_attrs: int,
                       cap: int, m: int, v_max: int, mp_chunk: int = 64,
-                      ladder: bool = False):
+                      ladder: bool = False, selector: str = "analytic"):
     """The whole config grid as one ``lax.while_loop`` (single compile).
 
     Returns ``run(st_stack, x, d, ops) -> st_stack`` where every
@@ -854,14 +863,14 @@ def make_ensemble_run(mode: str, backend: str, n_cfgs: int, n_attrs: int,
             "only bit-safe under the §5.3 sweep rung invariance")
     return _make_ensemble_run(str(mode), str(backend), int(n_cfgs),
                               int(n_attrs), int(cap), int(m), int(v_max),
-                              int(mp_chunk), bool(ladder))
+                              int(mp_chunk), bool(ladder), str(selector))
 
 
 @lru_cache(maxsize=None)
 def _make_ensemble_run(mode, backend, n_cfgs, n_attrs, cap, m, v_max,
-                       mp_chunk, ladder):
+                       mp_chunk, ladder, selector):
     cfg = _EnsCfg(mode, backend, n_cfgs, n_attrs, cap, m, v_max, mp_chunk,
-                  ladder)
+                  ladder, selector)
     coll = _LocalColl()
     pr_idx = ENSEMBLE_DELTAS.index("PR")
 

@@ -73,7 +73,10 @@ __all__ = [
 LADDER_TILE = 256
 
 
-def ladder_rungs(n_bins: int, tile: int = LADDER_TILE) -> Tuple[int, ...]:
+def ladder_rungs(n_bins: int, tile: int = LADDER_TILE, *,
+                 selector: str = "heuristic",
+                 g: Optional[int] = None,
+                 m: Optional[int] = None) -> Tuple[int, ...]:
     """Static bin-bucket ladder for K-adaptive evaluation (DESIGN.md §5.3).
 
     Ascending pow2 multiples of ``tile`` strictly below ``n_bins``, closed by
@@ -92,6 +95,16 @@ def ladder_rungs(n_bins: int, tile: int = LADDER_TILE) -> Tuple[int, ...]:
       (non-pow2 ``cap``, or ``cap < tile``) gets its trailing partial tile
       zero-padded by :func:`_theta_tiled_raw` — all-zero rows with θ' = 0,
       so the prefix/bit-parity argument is unaffected.
+
+    ``selector="analytic"`` (with the granule count ``g`` and decision width
+    ``m``) additionally prunes the pow2 set by the modeled padding-vs-traffic
+    tradeoff (``kernels/contingency/model.prune_ladder_rungs``): a rung
+    survives only if it saves a meaningful fraction of the per-iteration eval
+    cost — dispatch-bound tables (G ≫ K·V) collapse to few rungs, fewer
+    ``lax.switch`` branches.  The pruned set is a subset of the pow2 set
+    closed over the exact top rung, so every invariant above is inherited and
+    results stay byte-identical (the §5.3 rung-invariance lemma).  Other
+    selector values (``heuristic``/``pinned``) keep the full pow2 ladder.
     """
     rungs = []
     b = tile
@@ -99,6 +112,10 @@ def ladder_rungs(n_bins: int, tile: int = LADDER_TILE) -> Tuple[int, ...]:
         rungs.append(b)
         b *= 2
     rungs.append(n_bins)
+    if selector == "analytic" and g is not None and m is not None:
+        from repro.kernels.contingency.model import prune_ladder_rungs
+
+        return prune_ladder_rungs(rungs, int(g), int(m))
     return tuple(rungs)
 
 
@@ -179,14 +196,17 @@ def _cont_onehot(packed, d, w, valid, n_bins, m, *, bin_chunk: int = 512):
     return cont[:, :n_bins, :]
 
 
-def _cont_pallas(packed, d, w, valid, n_bins, m, *, interpret: bool):
+def _cont_pallas(packed, d, w, valid, n_bins, m, *, interpret: bool,
+                 selector=None):
     from repro.kernels.contingency.ops import contingency as _kernel
 
     w_ = jnp.where(valid, w, 0).astype(jnp.float32)
-    return _kernel(packed, d, w_, n_bins=n_bins, n_dec=m, interpret=interpret)
+    return _kernel(packed, d, w_, n_bins=n_bins, n_dec=m, interpret=interpret,
+                   selector=selector)
 
 
-@partial(jax.jit, static_argnames=("n_bins", "m", "backend", "interpret"))
+@partial(jax.jit, static_argnames=("n_bins", "m", "backend", "interpret",
+                                   "selector"))
 def candidate_contingency(
     packed: jnp.ndarray,
     d: jnp.ndarray,
@@ -197,17 +217,21 @@ def candidate_contingency(
     m: int,
     backend: str = "segment",
     interpret: bool = True,
+    selector: Optional[str] = None,
 ) -> jnp.ndarray:
     """counts[c, k, j] = Σ_g w_g · 1[packed[c,g] = k] · 1[d_g = j].
 
     The paper's REDUCE phase for a *batch* of candidates at once (MP × DP).
+    ``selector`` picks the Pallas tile-selection mode (None = analytic
+    default); the XLA backends have no tiles and ignore it.
     """
     if backend == "segment":
         return _cont_segment(packed, d, w, valid, n_bins, m)
     if backend == "onehot":
         return _cont_onehot(packed, d, w, valid, n_bins, m)
     if backend == "pallas":
-        return _cont_pallas(packed, d, w, valid, n_bins, m, interpret=interpret)
+        return _cont_pallas(packed, d, w, valid, n_bins, m,
+                            interpret=interpret, selector=selector)
     raise ValueError(f"unknown contingency backend: {backend}")
 
 
@@ -321,7 +345,7 @@ SWEEP_BACKENDS = ("sweep", "sweep_xla")
 
 
 @partial(jax.jit, static_argnames=("delta", "n_bins", "m", "backend",
-                                   "interpret", "v_max"))
+                                   "interpret", "v_max", "selector"))
 def candidate_theta(
     delta: str,
     packed: jnp.ndarray,
@@ -337,6 +361,7 @@ def candidate_theta(
     x_t: Optional[jnp.ndarray] = None,
     r_ids: Optional[jnp.ndarray] = None,
     v_max: Optional[int] = None,
+    selector: Optional[str] = None,
 ) -> jnp.ndarray:
     """Θ(D|B∪{a})[c] for a batch of candidates — the full MAP+REDUCE+sum.
 
@@ -362,7 +387,8 @@ def candidate_theta(
             w_ = jnp.where(valid, w, 0).astype(jnp.float32)
             return sweep_theta(
                 x_t, r_ids, d, w_, n, delta=delta, v_max=v_max,
-                n_bins=n_bins, n_dec=m, interpret=interpret)
+                n_bins=n_bins, n_dec=m, interpret=interpret,
+                selector=selector)
         return _theta_sweep_xla(
             delta, x_t, r_ids, d, w, valid, n, v_max=v_max, n_bins=n_bins,
             m=m)
@@ -372,7 +398,7 @@ def candidate_theta(
         w_ = jnp.where(valid, w, 0).astype(jnp.float32)
         return fused_theta(
             packed, d, w_, n, delta=delta, n_bins=n_bins, n_dec=m,
-            interpret=interpret)
+            interpret=interpret, selector=selector)
     if backend == "fused_xla":
         return _theta_fused_xla(delta, packed, d, w, valid, n, n_bins=n_bins, m=m)
     if backend not in ("segment", "onehot", "pallas"):
@@ -382,7 +408,7 @@ def candidate_theta(
             "sweep_xla)")
     cont = candidate_contingency(
         packed, d, w, valid, n_bins=n_bins, m=m, backend=backend,
-        interpret=interpret)
+        interpret=interpret, selector=selector)
     return measures.evaluate(delta, cont, n)
 
 

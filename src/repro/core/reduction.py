@@ -147,7 +147,8 @@ def _full_fingerprints(x, valid):
 
 
 @lru_cache(maxsize=None)
-def _eval_chunk_incremental(delta, backend, n_bins, m, v_max):
+def _eval_chunk_incremental(delta, backend, n_bins, m, v_max,
+                            selector=None):
     """Evaluate a chunk of candidates via packed incremental ids (optimized)."""
 
     @jax.jit
@@ -155,14 +156,15 @@ def _eval_chunk_incremental(delta, backend, n_bins, m, v_max):
         x_cand = jnp.take(x, cand_cols, axis=1).T          # [nc, G]
         packed = pack_ids(r_ids[None, :], x_cand, v_max)    # [nc, G]
         return candidate_theta(
-            delta, packed, d, w, active, n, n_bins=n_bins, m=m, backend=backend
+            delta, packed, d, w, active, n, n_bins=n_bins, m=m,
+            backend=backend, selector=selector
         ) + pr_correction
 
     return run
 
 
 @lru_cache(maxsize=None)
-def _eval_chunk_sweep(delta, backend, n_bins, m, v_max):
+def _eval_chunk_sweep(delta, backend, n_bins, m, v_max, selector=None):
     """Sweep backends (DESIGN.md §5.3): read-once slab form — candidate rows
     sliced from the pre-transposed ``x_t [A, cap]``, pack fused downstream."""
 
@@ -171,7 +173,8 @@ def _eval_chunk_sweep(delta, backend, n_bins, m, v_max):
         x_cand = jnp.take(x_t, cand_cols, axis=0)          # [nc, cap]
         return candidate_theta(
             delta, None, d, w, active, n, n_bins=n_bins, m=m,
-            backend=backend, x_t=x_cand, r_ids=r_ids, v_max=v_max
+            backend=backend, x_t=x_cand, r_ids=r_ids, v_max=v_max,
+            selector=selector
         ) + pr_correction
 
     return run
@@ -370,6 +373,7 @@ def plar_reduce(
     mode: str = "incremental",          # "incremental" (optimized) | "spark" (paper-faithful)
     backend: str = "segment",           # Θ backend: segment|onehot|pallas|fused|fused_xla|sweep|sweep_xla
     ladder: bool = False,                # K-adaptive bin ladder (DESIGN.md §5.3)
+    selector: str = "analytic",          # tile/rung selection: heuristic|analytic|pinned
     mp_chunk: int = 64,                  # model-parallelism level (paper Table 12 knob)
     grc_init: bool = True,               # paper Fig. 9 knob
     shrink: bool = False,                # FSPA universe shrinking
@@ -408,6 +412,11 @@ def plar_reduce(
     if backend not in _BACKENDS:
         raise ValueError(
             f"unknown Θ backend: {backend!r} (one of: {', '.join(_BACKENDS)})")
+    from repro.kernels.contingency.autotune import SELECTOR_MODES
+    if selector not in SELECTOR_MODES:
+        raise ValueError(
+            f"unknown selector: {selector!r} "
+            f"(one of: {', '.join(SELECTOR_MODES)})")
     engine = _resolve_engine(engine, backend)
     gran = resolve_granularity(
         x, d, source=source, grc_init=grc_init, n_dec=n_dec, v_max=v_max,
@@ -465,7 +474,7 @@ def plar_reduce(
         runner = make_engine_run(
             delta, mode, backend, A, cap, m, gran.v_max, float(tol),
             float(tie_tol), bool(shrink), max_sel, int(mp_chunk),
-            bool(ladder))
+            bool(ladder), str(selector))
         reduct, theta_hist, iterations, ev, per_iter = run_engine(
             runner, cap, A, gran.valid, gran.x, gran.d, gran.w, n,
             theta_full, core, warm_start=warm)
@@ -507,7 +516,9 @@ def plar_reduce(
     # K-adaptive candidate-eval bins (ladder on): the host twin of the
     # engine's lax.switch — same static rung set, chosen per iteration from
     # the synced k, one (lru-cached) compile per rung actually visited.
-    rungs = ladder_rungs(cap * v)
+    # The selector-pruned set is a function of (cap, m) only, so host and
+    # device engines derive identical rungs (byte parity, DESIGN.md §5.3).
+    rungs = ladder_rungs(cap * v, selector=selector, g=cap, m=m)
 
     def _eval_bins_for(k_):
         if ladder:
@@ -577,10 +588,12 @@ def plar_reduce(
             # for the host-only Pallas backends.
             eval_bins = _eval_bins_for(k)
             if backend in SWEEP_BACKENDS:
-                runner = _eval_chunk_sweep(delta, backend, eval_bins, m, v)
+                runner = _eval_chunk_sweep(delta, backend, eval_bins, m, v,
+                                           selector)
                 table = x_t_full
             else:
-                runner = _eval_chunk_incremental(delta, backend, eval_bins, m, v)
+                runner = _eval_chunk_incremental(delta, backend, eval_bins,
+                                                 m, v, selector)
                 table = gran.x
             for s in range(0, len(remaining), nc):
                 cols = np.asarray(remaining[s : s + nc], np.int32)
@@ -723,6 +736,7 @@ def plar_reduce_ensemble(
     mode: str = "incremental",
     backend: str = "segment",            # ENSEMBLE_BACKENDS
     ladder: bool = False,                # requires backend="sweep_xla"
+    selector: str = "analytic",          # tile/rung selection mode
     mp_chunk: int = 64,
     grc_init: bool = True,
     exact: bool = True,
@@ -818,7 +832,8 @@ def plar_reduce_ensemble(
         core_count=jnp.asarray(core_counts),
     )
     runner = make_ensemble_run(
-        mode, backend, C, A, cap, m, gran.v_max, int(mp_chunk), bool(ladder))
+        mode, backend, C, A, cap, m, gran.v_max, int(mp_chunk), bool(ladder),
+        str(selector))
     fin, loop_s = run_ensemble(
         runner, cap, A, gran.valid, gran.x, gran.d, ops)
     per_cfg = unpack_ensemble_result(fin, core_counts)

@@ -1,4 +1,12 @@
-from .autotune import autotune_block_sizes, select_block_sizes
+from .autotune import (
+    SELECTOR_MODES,
+    autotune_block_sizes,
+    autotune_cache_clear,
+    autotune_cache_info,
+    resolve_tiles,
+    select_block_sizes,
+)
+from .model import KernelCost, kernel_cost, modeled_time_s, rank_tiles
 from .ops import contingency, fused_theta, sweep_theta, theta_scale
 from .ref import contingency_ref, fused_theta_ref, sweep_theta_ref
 
@@ -12,4 +20,12 @@ __all__ = [
     "theta_scale",
     "select_block_sizes",
     "autotune_block_sizes",
+    "autotune_cache_clear",
+    "autotune_cache_info",
+    "resolve_tiles",
+    "SELECTOR_MODES",
+    "KernelCost",
+    "kernel_cost",
+    "modeled_time_s",
+    "rank_tiles",
 ]

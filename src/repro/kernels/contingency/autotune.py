@@ -1,54 +1,75 @@
-"""(BK, BG) block-size selection for the contingency kernels (DESIGN.md §5.2).
+"""Tile selection for the contingency kernels (DESIGN.md §5.2).
 
-Two layers, mirroring how production kernel libraries pick tilings:
+Three selector modes, shared by every kernel entry point
+(:func:`resolve_tiles` is the one seam ``ops.py`` calls):
 
-* :func:`select_block_sizes` — a zero-cost shape heuristic: MXU-aligned BK,
-  contraction depth BG sized so the per-step VMEM working set (packed tile +
-  wd tile + output/accumulator tile, double-buffered streams) stays under the
-  budget.  This is the default used by ``ops.contingency``/``ops.fused_theta``
-  when the caller passes ``bk=None``/``bg=None``.
-* :func:`autotune_block_sizes` — an explicit hook that *times* a small grid of
-  candidate tilings for one problem shape and caches the winner per
-  (shape, measure, fused) key.  Opt-in: interpret-mode timings (this host) are
-  correctness vehicles, so the hook only orders configs meaningfully on real
-  TPU backends — which is exactly where it is intended to run.
+* ``analytic`` — **the default**: the closed-form roofline model of
+  :mod:`repro.kernels.contingency.model` ranks every feasible aligned tiling
+  and picks the best modeled time.  Free (no compiles), shape-exact, and
+  consistent across processes.  Tuned picks persisted by
+  :func:`autotune_block_sizes` (keyed by platform × kernel × shape bucket)
+  override the model when present, so a service process reuses tunings
+  measured elsewhere.
+* ``heuristic`` — the PR-1 zero-cost shape rule (:func:`select_block_sizes`):
+  largest MXU-aligned tile under the VMEM budget.  Kept as the legacy
+  fallback and as a parity baseline for the selector tests.
+* ``pinned`` — the kernels' module defaults (``DEFAULT_BK``/``BG``/``BC``),
+  for pinning a known tiling in benchmarks and bisections.
+
+:func:`autotune_block_sizes` is the measured refinement: the analytic rank
+prunes the candidate grid to a top-k (default 3) **before any timing**, and
+timing itself is opt-in (``refine=True``) — on this interpret-mode host
+timings are meaningless, and on real hardware each timed candidate costs a
+compile.  Winners land in a bounded in-memory LRU *and* the on-disk cache.
 """
 from __future__ import annotations
 
+import json
+import logging
+import os
 import time
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from pathlib import Path
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-LANE = 128
-SUBLANE = 8
-VMEM_BUDGET_BYTES = 4 * 1024 * 1024   # per-step working set cap (¼ of VMEM)
+from .model import (  # noqa: F401  (public re-exports: the constants' one home)
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET_BYTES,
+    feasible_tiles,
+    rank_tiles,
+    select_tiles,
+    sweep_working_set_bytes,
+    working_set_bytes,
+)
 
-# Candidate grid for the timing-based hook: MXU-aligned bin tiles × a range of
-# contraction depths.
+logger = logging.getLogger(__name__)
+
+SELECTOR_MODES = ("heuristic", "analytic", "pinned")
+DEFAULT_SELECTOR = "analytic"
+
+# Candidate grid of the *measured* hook when the caller pins one explicitly;
+# the default candidate set is the model's feasible enumeration.
 CANDIDATE_BK = (128, 256, 512)
 CANDIDATE_BG = (256, 512, 1024)
 
-_CACHE: Dict[Tuple, Tuple[int, int]] = {}
+# In-memory tuning cache: bounded LRU (a long-lived service process sweeps
+# many (K, G) regimes; the cache must not grow with them unboundedly).
+_CACHE_MAXSIZE = 256
+_CACHE: "OrderedDict[Tuple, Tuple[int, ...]]" = OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+# On-disk tuning cache (shared across processes — the PR 5/6 service seam).
+_DISK_ENV = "REPRO_AUTOTUNE_CACHE"
+_disk_state: Dict[str, object] = {"path": None, "data": None}
 
 
 def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
-
-
-def working_set_bytes(bk: int, bg: int, m: int) -> int:
-    """f32/int32 bytes resident per grid step.
-
-    packed tile + double-buffered wd stream + output/accumulator tile + the
-    [BK, BG] one-hot intermediate (the largest term for big tiles).
-    """
-    packed = 4 * bg
-    wd = 2 * 4 * bg * m          # double-buffered stream
-    acc = 4 * bk * m             # output/accumulator tile
-    onehot = 4 * bk * bg         # materialized before the dot
-    return packed + wd + acc + onehot
 
 
 def select_block_sizes(
@@ -77,6 +98,201 @@ def select_block_sizes(
     return bk, bg
 
 
+def _pinned_tiles(kernel: str) -> Tuple[int, ...]:
+    if kernel == "sweep":
+        from .sweep import DEFAULT_BC, DEFAULT_BG, DEFAULT_BK
+
+        return (DEFAULT_BC, DEFAULT_BK, DEFAULT_BG)
+    from .kernel import DEFAULT_BG, DEFAULT_BK
+
+    return (DEFAULT_BK, DEFAULT_BG)
+
+
+def resolve_tiles(
+    kernel: str,
+    *,
+    nc: int,
+    g: int,
+    n_bins: int,
+    m: int,
+    v_max: int = 1,
+    delta: str = "SCE",
+    selector: Optional[str] = None,
+) -> Tuple[int, ...]:
+    """The shared tile selector: ``(bk, bg)``, or ``(bc, bk, bg)`` for sweep.
+
+    ``selector=None`` means the default mode (``analytic``).  Resolution is
+    pure host Python over concrete ints — the ``ops.py`` wrappers call it
+    *outside* (or at trace time of) their jitted bodies, so the chosen tiles
+    are ordinary static arguments and no selector state is baked into a
+    compiled executable.
+    """
+    mode = DEFAULT_SELECTOR if selector is None else selector
+    if mode not in SELECTOR_MODES:
+        raise ValueError(
+            f"unknown tile selector: {mode!r} "
+            f"(one of: {', '.join(SELECTOR_MODES)})")
+    if mode == "pinned":
+        return _pinned_tiles(kernel)
+    if mode == "heuristic":
+        bk, bg = select_block_sizes(n_bins, g, m)
+        if kernel == "sweep":
+            from .sweep import DEFAULT_BC
+
+            return (DEFAULT_BC, bk, bg)
+        return (bk, bg)
+    # analytic: a persisted tuning for this (platform, kernel, shape bucket)
+    # wins over the model — measured beats modeled when available.
+    tuned = _disk_get(_disk_key(jax.default_backend(), kernel,
+                                shape_bucket(nc, g, n_bins, m)))
+    if tuned is not None:
+        return tuned
+    return select_tiles(kernel, nc, g, n_bins, m, v_max=v_max, delta=delta)
+
+
+# ---------------------------------------------------------------------------
+# persistent tuning cache: (platform, kernel, shape-bucket) → tiles
+# ---------------------------------------------------------------------------
+
+
+def shape_bucket(nc: int, g: int, n_bins: int, m: int) -> Tuple[int, int, int, int]:
+    """Pow2 shape bucket: one tuning covers a ×2 band per axis, so the greedy
+    loop's drifting (K, G) regimes hit a handful of entries, not thousands."""
+
+    def p2(v: int) -> int:
+        b = 1
+        while b < max(v, 1):
+            b *= 2
+        return b
+
+    return (p2(nc), p2(g), p2(n_bins), p2(m))
+
+
+def _disk_path() -> Path:
+    env = os.environ.get(_DISK_ENV)
+    if env:
+        return Path(env)
+    base = Path(os.environ.get("XDG_CACHE_HOME",
+                               Path.home() / ".cache")) / "repro-plar"
+    return base / "autotune.json"
+
+
+def _disk_key(platform: str, kernel: str, bucket: Tuple[int, ...]) -> str:
+    return f"{platform}|{kernel}|" + "x".join(str(b) for b in bucket)
+
+
+def _disk_data() -> Dict[str, list]:
+    """Lazily loaded disk cache, reloaded when the path changes (tests point
+    ``REPRO_AUTOTUNE_CACHE`` at tmp files)."""
+    path = _disk_path()
+    if _disk_state["path"] != path or _disk_state["data"] is None:
+        data: Dict[str, list] = {}
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            if isinstance(raw, dict):
+                data = {str(k): list(v) for k, v in raw.items()
+                        if isinstance(v, (list, tuple))}
+        except (OSError, ValueError):
+            data = {}
+        _disk_state["path"] = path
+        _disk_state["data"] = data
+    return _disk_state["data"]  # type: ignore[return-value]
+
+
+def _disk_get(key: str) -> Optional[Tuple[int, ...]]:
+    val = _disk_data().get(key)
+    return tuple(int(v) for v in val) if val else None
+
+
+def _disk_put(key: str, tiles: Sequence[int]) -> None:
+    data = _disk_data()
+    data[key] = [int(t) for t in tiles]
+    path = _disk_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError as e:  # read-only FS etc. — tuning still served from memory
+        logger.warning("autotune: could not persist tuning cache to %s: %s",
+                       path, e)
+
+
+# ---------------------------------------------------------------------------
+# measured refinement
+# ---------------------------------------------------------------------------
+
+
+def _cache_put(key: Tuple, tiles: Tuple[int, ...]) -> None:
+    _CACHE[key] = tiles
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _CACHE_MAXSIZE:
+        _CACHE.popitem(last=False)
+
+
+def autotune_cache_clear(disk: bool = False) -> None:
+    """Drop all in-memory tunings (and the on-disk cache with ``disk=True``)."""
+    _CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+    if disk:
+        _disk_state["data"] = {}
+        try:
+            _disk_path().unlink(missing_ok=True)
+        except OSError:
+            pass
+
+
+def autotune_cache_info() -> Dict[str, object]:
+    """Cache observability: sizes, hit/miss counters, disk location."""
+    return {
+        "size": len(_CACHE),
+        "maxsize": _CACHE_MAXSIZE,
+        "hits": _CACHE_STATS["hits"],
+        "misses": _CACHE_STATS["misses"],
+        "disk_path": str(_disk_path()),
+        "disk_entries": len(_disk_data()),
+    }
+
+
+def _build_candidate_fn(kernel, tiles, packed, wd, x_t, r_ids, *, n_bins,
+                        delta, v_max, interpret):
+    """Zero-arg launcher for one candidate tiling (monkeypatch seam for the
+    compile-count tests)."""
+    if kernel == "contingency":
+        from .kernel import contingency_pallas
+
+        bk, bg = tiles
+        return lambda: contingency_pallas(
+            packed, wd, n_bins=n_bins, bk=bk, bg=bg, interpret=interpret)
+    if kernel == "fused":
+        from .fused import fused_theta_pallas
+
+        bk, bg = tiles
+        return lambda: fused_theta_pallas(
+            packed, wd, n_bins=n_bins, delta=delta, bk=bk, bg=bg,
+            interpret=interpret)
+    from .sweep import sweep_theta_pallas
+
+    bc, bk, bg = tiles
+    return lambda: sweep_theta_pallas(
+        x_t, r_ids, wd, v_max=v_max, n_bins=n_bins, delta=delta, bc=bc,
+        bk=bk, bg=bg, interpret=interpret)
+
+
+def _time_candidate(fn, reps: int) -> float:
+    """Best-of-reps wall time; every rep blocks on its own output so async
+    dispatch cannot fold rep k's device time into rep k+1's measurement."""
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def autotune_block_sizes(
     nc: int,
     g: int,
@@ -84,62 +300,86 @@ def autotune_block_sizes(
     m: int,
     *,
     delta: Optional[str] = None,
+    kernel: Optional[str] = None,
+    v_max: int = 1,
     reps: int = 3,
     interpret: bool = True,
-    candidates: Optional[Tuple[Tuple[int, int], ...]] = None,
-) -> Tuple[int, int]:
-    """Time candidate tilings for one problem shape; cache and return the best.
+    candidates: Optional[Sequence[Sequence[int]]] = None,
+    refine: bool = False,
+    top_k: int = 3,
+    platform: Optional[str] = None,
+) -> Tuple[int, ...]:
+    """Analytically rank candidate tilings; optionally time the top-k.
 
     ``delta=None`` tunes the unfused contingency kernel; a measure name tunes
-    the fused Θ kernel.  Results are memoized per (shape, delta, sweep) key so
-    the greedy loop pays the sweep once per (K, G) regime.
-    """
-    if candidates is not None:
-        candidates = tuple(tuple(c) for c in candidates)
-    key = (nc, g, n_bins, m, delta, interpret, reps, candidates)
-    if key in _CACHE:
-        return _CACHE[key]
+    the fused Θ kernel; ``kernel="sweep"`` (with ``v_max``) tunes the
+    multi-candidate sweep kernel — candidates are then ``(bc, bk, bg)``.
 
-    from .fused import fused_theta_pallas
-    from .kernel import contingency_pallas
+    By default (``refine=False``) the pick is the analytic rank's best: zero
+    compiles.  ``refine=True`` times the ``top_k`` (default 3) analytically
+    best candidates — each rep blocked on its own output — and candidates
+    whose compile fails are skipped with a logged warning, never silently.
+    Winners are memoized in the bounded in-memory LRU (keyed *including the
+    JAX platform* — a CPU tuning must not leak onto TPU) and persisted to the
+    on-disk cache so other processes' ``analytic`` selector reuses them.
+    """
+    if kernel is None:
+        kernel = "contingency" if delta is None else "fused"
+    if kernel not in ("contingency", "fused", "sweep"):
+        raise ValueError(
+            f"unknown kernel: {kernel!r} (one of: contingency, fused, sweep)")
+    delta_eff = delta or "SCE"
+    if platform is None:
+        platform = jax.default_backend()
+    if candidates is not None:
+        candidates = tuple(tuple(int(t) for t in c) for c in candidates)
+    key = (platform, kernel, nc, g, n_bins, m, delta, v_max, interpret, reps,
+           candidates, refine, top_k)
+    if key in _CACHE:
+        _CACHE_STATS["hits"] += 1
+        _CACHE.move_to_end(key)
+        return _CACHE[key]
+    _CACHE_STATS["misses"] += 1
 
     m_pad = _round_up(max(m, 1), LANE)
-    rng = np.random.default_rng(0)
-    packed = jnp.asarray(rng.integers(0, n_bins, (nc, g)), jnp.int32)
-    wd = jnp.zeros((g, m_pad), jnp.float32).at[
-        jnp.arange(g), jnp.asarray(rng.integers(0, m, (g,)))
-    ].set(1.0)
+    ranked = rank_tiles(kernel, nc, g, n_bins, m_pad, v_max=v_max,
+                        delta=delta_eff, candidates=candidates)
+    best = ranked[0][0]
 
-    if candidates is None:
-        # Fall back to the (budget-respecting) shape heuristic if no candidate
-        # fits — never time a tiling the VMEM filter just rejected.
-        candidates = tuple(
-            (bk, bg)
-            for bk in CANDIDATE_BK
-            for bg in CANDIDATE_BG
-            if working_set_bytes(bk, bg, m_pad) <= VMEM_BUDGET_BYTES
-        ) or (select_block_sizes(n_bins, g, m_pad),)
+    if refine and len(ranked) > 1:
+        rng = np.random.default_rng(0)
+        x_host = rng.integers(0, max(n_bins // max(v_max, 1), 1), (nc, g))
+        packed = jnp.asarray(rng.integers(0, n_bins, (nc, g)), jnp.int32)
+        x_t = jnp.asarray(x_host, jnp.int32)
+        r_ids = jnp.zeros((g,), jnp.int32)
+        wd = jnp.zeros((g, m_pad), jnp.float32).at[
+            jnp.arange(g), jnp.asarray(rng.integers(0, max(m, 1), (g,)))
+        ].set(1.0)
 
-    best, best_dt = select_block_sizes(n_bins, g, m_pad), float("inf")
-    for bk, bg in candidates:
-        if delta is None:
-            fn = lambda: contingency_pallas(
-                packed, wd, n_bins=n_bins, bk=bk, bg=bg, interpret=interpret)
-        else:
-            fn = lambda: fused_theta_pallas(
-                packed, wd, n_bins=n_bins, delta=delta, bk=bk, bg=bg,
-                interpret=interpret)
-        try:
-            jax.block_until_ready(fn())            # compile + warm
-        except Exception:
-            continue                               # invalid tiling on this backend
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn()
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / reps
-        if dt < best_dt:
-            best, best_dt = (bk, bg), dt
+        best_dt = float("inf")
+        timed_best = None
+        for tiles, _cost, _t in ranked[:top_k]:
+            fn = _build_candidate_fn(
+                kernel, tiles, packed, wd, x_t, r_ids, n_bins=n_bins,
+                delta=delta_eff, v_max=v_max, interpret=interpret)
+            try:
+                jax.block_until_ready(fn())            # compile + warm
+            except Exception as e:
+                logger.warning(
+                    "autotune: %s candidate %s failed to compile on %s "
+                    "(skipped): %s", kernel, tiles, platform, e)
+                continue
+            dt = _time_candidate(fn, reps)
+            if dt < best_dt:
+                timed_best, best_dt = tiles, dt
+        if timed_best is not None:
+            best = timed_best
 
-    _CACHE[key] = best
+    _cache_put(key, best)
+    # Persist full-grid ranks and every measured refinement; a rank over a
+    # caller-restricted candidate list is not a shape tuning — don't let it
+    # shadow the model for the whole bucket.
+    if candidates is None or refine:
+        _disk_put(_disk_key(platform, kernel, shape_bucket(nc, g, n_bins, m)),
+                  best)
     return best

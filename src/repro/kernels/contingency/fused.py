@@ -42,7 +42,8 @@ from jax.experimental.pallas import tpu as pltpu
 # of truth: plain branch-free jnp, so they trace inside the kernel unchanged.
 from repro.core.measures import RAW_ROWS as EPILOGUES
 
-from .kernel import DEFAULT_BG, DEFAULT_BK
+from . import model
+from .kernel import DEFAULT_BG, DEFAULT_BK, _cost_estimate
 
 
 def _fused_kernel(packed_ref, wd_ref, out_ref, acc_ref, *, bk: int, delta: str):
@@ -120,6 +121,8 @@ def fused_theta_pallas(
         out_specs=pl.BlockSpec((1, 1), lambda c, k, g_: (c, 0)),
         out_shape=jax.ShapeDtypeStruct((nc, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bk, m), jnp.float32)],
+        cost_estimate=_cost_estimate(
+            model.fused_cost(nc, g, n_bins, m, bk, bg, delta=delta)),
         interpret=interpret,
     )(packed, wd)
     return out[:, 0]

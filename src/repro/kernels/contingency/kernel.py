@@ -34,8 +34,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import model
+
 DEFAULT_BK = 128   # bin-tile (MXU sublane-aligned output rows)
 DEFAULT_BG = 512   # granule-tile (contraction depth per step)
+
+
+def _cost_estimate(cost: model.KernelCost) -> pl.CostEstimate:
+    """Analytic cost (DESIGN.md §5.2) handed to the compiler's scheduler —
+    the same closed form the tile selector ranks on."""
+    return pl.CostEstimate(
+        flops=int(cost.flops),
+        transcendentals=int(cost.transcendentals),
+        bytes_accessed=int(cost.hbm_bytes),
+    )
 
 
 def _contingency_kernel(packed_ref, wd_ref, out_ref, *, bk: int):
@@ -93,6 +105,8 @@ def contingency_pallas(
         ],
         out_specs=pl.BlockSpec((1, bk, m), lambda c, k, g_: (c, k, 0)),
         out_shape=jax.ShapeDtypeStruct((nc, k_pad, m), jnp.float32),
+        cost_estimate=_cost_estimate(
+            model.contingency_cost(nc, g, n_bins, m, bk, bg)),
         interpret=interpret,
     )(packed, wd)
     return out[:, :n_bins, :]

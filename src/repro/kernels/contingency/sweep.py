@@ -41,6 +41,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.measures import RAW_ROWS as EPILOGUES
 
+from . import model
+from .kernel import _cost_estimate
+
 DEFAULT_BC = 8     # candidate block (shared-operand reuse factor)
 DEFAULT_BK = 128   # bin-tile (MXU sublane-aligned output rows)
 DEFAULT_BG = 256   # granule-tile (contraction depth per step)
@@ -141,6 +144,9 @@ def sweep_theta_pallas(
         out_specs=pl.BlockSpec((bc, 1), lambda b, k, g_: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((c_pad, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bc, bk, m), jnp.float32)],
+        cost_estimate=_cost_estimate(
+            model.sweep_cost(nc, g, n_bins, m, bc, bk, bg, v_max=v_max,
+                             delta=delta)),
         interpret=interpret,
     )(x_t, r_ids.reshape(1, -1), wd)
     return out[:nc, 0]

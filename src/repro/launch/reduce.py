@@ -46,6 +46,12 @@ def main():
                          "device engine")
     ap.add_argument("--engine", default="auto", choices=["auto", "host", "device"],
                     help="greedy loop: device-resident while_loop or legacy host loop")
+    ap.add_argument("--selector", default="analytic",
+                    choices=["heuristic", "analytic", "pinned"],
+                    help="kernel tile / ladder-rung selection (DESIGN.md "
+                         "§5.2): analytic = roofline cost model (default), "
+                         "heuristic = legacy VMEM-occupancy rule, pinned = "
+                         "kernel-module defaults")
     ap.add_argument("--shrink", action="store_true",
                     help="FSPA universe shrinking (drop pure classes)")
     ap.add_argument("--mp-chunk", type=int, default=64)
@@ -118,7 +124,8 @@ def main():
         rs = plar_reduce_ensemble(
             x, d, source=source, chunk_rows=args.chunk_rows, configs=configs,
             seeds=seeds, mode=args.mode, backend=args.backend, ladder=ladder,
-            mp_chunk=args.mp_chunk, grc_init=not args.no_grc)
+            selector=args.selector, mp_chunk=args.mp_chunk,
+            grc_init=not args.no_grc)
         grid = [{"delta": dd} if seeds is None else {"delta": dd, "seed": s}
                 for dd in measures_ for s in (seeds or [None])]
         out = {
@@ -163,6 +170,7 @@ def main():
                                     max_features=args.max_features,
                                     collective=args.collective,
                                     backend=args.backend, ladder=ladder,
+                                    selector=args.selector,
                                     engine=args.engine)
     else:
         from repro.core import plar_reduce
@@ -170,6 +178,7 @@ def main():
         r = plar_reduce(x, d, source=source, chunk_rows=args.chunk_rows,
                         delta=args.delta, mode=args.mode,
                         backend=args.backend, ladder=ladder,
+                        selector=args.selector,
                         engine=args.engine, shrink=args.shrink,
                         mp_chunk=args.mp_chunk, grc_init=not args.no_grc,
                         max_features=args.max_features)

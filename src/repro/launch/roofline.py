@@ -1,7 +1,10 @@
 """Roofline terms from compiled dry-run artifacts (no hardware required).
 
 Hardware constants: TPU v5e-class — 197 bf16 TFLOP/s, 819 GB/s HBM,
-~50 GB/s/link ICI (per the brief).
+~50 GB/s/link ICI (per the brief).  This module is the one home for those
+constants: the analytic kernel-cost selector
+(:mod:`repro.kernels.contingency.model`) ranks candidate tilings on the
+same :func:`roofline_terms` bound.
 
 Three terms per (arch × shape × mesh), all in seconds-per-step:
 
