@@ -36,6 +36,7 @@ PRESETS = {
     "ingest": ["ingest_stream_vs_monolithic"],
     "sweep": ["sweep_ladder_speedup"],
     "service": ["service_incremental_vs_recompute"],
+    "serve": ["serve_batched_vs_single_flight", "serve_dedup_and_admission"],
     "autotune": ["autotune_tile_selection", "autotune_dispatch_bound"],
 }
 
@@ -47,6 +48,7 @@ def main() -> None:
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
     from .kernel_bench import ALL_BENCHES
     from .paper_tables import ALL_TABLES
+    from .serve_bench import ALL_SERVE_BENCHES
     from .service_bench import ALL_SERVICE_BENCHES
 
     # accept both "--flag VALUE" and "--flag=VALUE"
@@ -76,7 +78,8 @@ def main() -> None:
     wanted = argv or None
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
             **ALL_ENSEMBLE_BENCHES, **ALL_INGEST_BENCHES,
-            **ALL_SERVICE_BENCHES, **ALL_AUTOTUNE_BENCHES}
+            **ALL_SERVICE_BENCHES, **ALL_SERVE_BENCHES,
+            **ALL_AUTOTUNE_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:

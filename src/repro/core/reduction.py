@@ -66,7 +66,8 @@ from .plan import (
 __all__ = ["ReductionResult", "plar_reduce", "plar_reduce_ensemble",
            "har_reduce", "fspa_reduce", "raw_granularity",
            "resolve_granularity", "bagged_weights", "expand_ensemble_grid",
-           "normalize_ensemble_configs"]
+           "normalize_ensemble_configs", "partition_reduce_params",
+           "ENSEMBLE_SHARED_KEYS"]
 
 _MODES = ("incremental", "spark")
 _BACKENDS = ("segment", "onehot", "pallas", "fused", "fused_xla", "sweep",
@@ -357,6 +358,37 @@ def resolve_granularity(
         build_granularity(x, d, n_dec=n_dec, v_max=v_max, exact=exact))
 
 
+def _validate_warm_start(warm_start, n_attrs: Optional[int]) -> List[int]:
+    """Canonicalize + validate a warm-start prefix (shared by the sequential
+    driver and the ensemble grid — one error surface for both).
+
+    ``n_attrs=None`` skips the range check (grid normalization runs before a
+    granularity exists; the driver re-validates with the real A).
+
+    A prefix longer than ``max_features`` is deliberately NOT an error:
+    like core attributes, the forced prefix folds unconditionally and the
+    cap gates only further greedy additions — a cold run whose core
+    overflows the cap returns more than ``max_features`` attributes, and
+    warm-repairing from that result must be expressible (DESIGN.md §3.9).
+    """
+    warm: List[int] = []
+    for a in warm_start:
+        ai = int(a)
+        if ai != a:
+            raise ValueError(
+                f"warm_start entries must be integral attribute "
+                f"indices, got {a!r}")
+        warm.append(ai)
+    if len(set(warm)) != len(warm):
+        raise ValueError(f"warm_start contains duplicates: {warm}")
+    if n_attrs is not None:
+        bad = [a for a in warm if not 0 <= a < n_attrs]
+        if bad:
+            raise ValueError(
+                f"warm_start attributes {bad} out of range [0, {n_attrs})")
+    return warm
+
+
 def plar_reduce(
     x=None,
     d=None,
@@ -397,13 +429,14 @@ def plar_reduce(
     (asserted by tests/test_engine.py::test_warm_start_parity).
 
     Like core attributes, the forced prefix folds unconditionally:
-    ``max_features`` caps only further *greedy* additions.  A prefix is
-    validated up front — entries must be integral, unique, in ``[0, A)``,
-    and no longer than ``max_features`` when one is set (the cap bounds the
-    whole selection, so a longer prefix could never be a valid result) —
-    raising ``ValueError`` instead of a shape error inside the compiled
-    engine.  ``warm_start=prefix, max_features=len(prefix)`` folds the
-    prefix and adds nothing — a pure re-evaluation of its Θ trajectory.
+    ``max_features`` caps only further *greedy* additions — a prefix longer
+    than the cap folds whole and adds nothing, mirroring a cold run whose
+    forced core overflows the cap (so warm-repairing from such a result
+    stays expressible).  A prefix is validated up front — entries must be
+    integral, unique, and in ``[0, A)`` — raising ``ValueError`` instead of
+    a shape error inside the compiled engine.  ``warm_start=prefix,
+    max_features=len(prefix)`` folds the prefix and adds nothing — a pure
+    re-evaluation of its Θ trajectory.
     """
     t0 = time.perf_counter()
     if mode not in _MODES:
@@ -430,25 +463,7 @@ def plar_reduce(
 
     warm: Optional[List[int]] = None
     if warm_start is not None:
-        warm = []
-        for a in warm_start:
-            ai = int(a)
-            if ai != a:
-                raise ValueError(
-                    f"warm_start entries must be integral attribute "
-                    f"indices, got {a!r}")
-            warm.append(ai)
-        if len(set(warm)) != len(warm):
-            raise ValueError(f"warm_start contains duplicates: {warm}")
-        bad = [a for a in warm if not 0 <= a < A]
-        if bad:
-            raise ValueError(
-                f"warm_start attributes {bad} out of range [0, {A})")
-        if max_features is not None and len(warm) > int(max_features):
-            raise ValueError(
-                f"warm_start prefix of length {len(warm)} exceeds "
-                f"max_features={int(max_features)}: the cap bounds the whole "
-                f"selection, so the prefix could never be a valid result")
+        warm = _validate_warm_start(warm_start, A)
 
     # Θ(D|C): stopping target.
     all_cols = jnp.arange(A, dtype=jnp.int32)
@@ -648,7 +663,49 @@ _ENSEMBLE_DEFAULTS = {
     "compute_core": True,
     "eps": 0.0,
     "seed": None,          # bagged row-weight resample seed (None = no bag)
+    "warm_start": None,    # forced greedy-resume prefix (replaces the core)
 }
+
+# Driver kwargs of :func:`plar_reduce` that the stacked engine *shares*
+# across a grid (static trace choices + ingestion) — the complement of
+# ``_ENSEMBLE_DEFAULTS``.  The serving scheduler uses this split to decide
+# whether heterogeneous single-config queries can ride one stacked dispatch:
+# per-config knobs may differ, shared knobs must agree.
+ENSEMBLE_SHARED_KEYS = ("mode", "backend", "ladder", "selector", "mp_chunk",
+                        "exact", "grc_init", "chunk_rows")
+
+
+def partition_reduce_params(delta: str, params: dict):
+    """Split one ``plar_reduce``-style ``(delta, params)`` query into the
+    ``(config, shared)`` pair the stacked ensemble engine takes — or return
+    ``None`` when the query cannot be expressed on it.
+
+    A query is stackable when its measure is in :data:`ENSEMBLE_DELTAS`,
+    every param is either a per-config grid knob (``_ENSEMBLE_DEFAULTS``) or
+    a shared static (:data:`ENSEMBLE_SHARED_KEYS`), the backend (if given)
+    is an :data:`ENSEMBLE_BACKENDS` member, and the ladder (if on) rides
+    ``sweep_xla`` (the §3.8 shared-rung constraint).  Queries that fall
+    outside — host-only Pallas backends, ``engine="host"``, unknown knobs —
+    are served solo by the scheduler instead.
+    """
+    if delta not in ENSEMBLE_DELTAS:
+        return None
+    config = {"delta": delta}
+    shared = {}
+    for k, v in params.items():
+        if k in _ENSEMBLE_DEFAULTS and k != "delta":
+            config[k] = v
+        elif k in ENSEMBLE_SHARED_KEYS:
+            shared[k] = v
+        else:
+            return None
+    if shared.get("backend", "segment") not in ENSEMBLE_BACKENDS:
+        return None
+    if shared.get("ladder") and shared.get("backend") != "sweep_xla":
+        return None
+    if shared.get("mode", "incremental") not in _MODES:
+        return None
+    return config, shared
 
 
 def expand_ensemble_grid(configs, seeds=None):
@@ -695,6 +752,11 @@ def normalize_ensemble_configs(configs, seeds=None) -> List[dict]:
             raise ValueError(
                 f"unknown measure: {full['delta']!r} "
                 f"(one of: {', '.join(ENSEMBLE_DELTAS)})")
+        if full["warm_start"] is not None:
+            # integral/dupe validation here; range re-checked by the
+            # driver once the granularity (and so A) exists
+            full["warm_start"] = _validate_warm_start(
+                full["warm_start"], None)
         out.append(full)
     return out
 
@@ -748,11 +810,15 @@ def plar_reduce_ensemble(
     runs (tests/test_ensemble.py) — but the grid shares a single XLA compile
     and a single pass over the granule/candidate tiles per iteration
     (DESIGN.md §3.8).  Per-config knobs: ``delta``, ``tol``, ``tie_tol``,
-    ``max_features``, ``shrink``, ``compute_core``, ``eps``, and ``seed``
+    ``max_features``, ``shrink``, ``compute_core``, ``eps``, ``seed``
     (a bagged row-weight resample via :func:`bagged_weights`; the sequential
     twin of config ``c`` is then ``plar_reduce`` on the same granularity
-    with ``w`` replaced).  Shared knobs (``mode``, ``backend``, ``ladder``,
-    ``mp_chunk``) are static trace choices.
+    with ``w`` replaced), and ``warm_start`` (a forced greedy-resume prefix
+    riding the forced-core path — the stacked twin of
+    ``plar_reduce(warm_start=...)``, byte-identical to it per config, which
+    is what lets the serving scheduler batch warm repairs).  Shared knobs
+    (``mode``, ``backend``, ``ladder``, ``mp_chunk``) are static trace
+    choices.
 
     Results come back in grid order (``configs`` × ``seeds``); ``elapsed_s``
     is the per-config share of the total wall clock, and ``per_iteration_s``
@@ -805,7 +871,15 @@ def plar_reduce_ensemble(
             measures.evaluate(c["delta"], cont_j, jnp.int32(n_j)))
 
         core_j: List[int] = []
-        if c["compute_core"]:
+        if c["warm_start"] is not None:
+            # warm resume (DESIGN.md §3.7 on the stacked engine): the prefix
+            # stands in for the core — forced folds through the same
+            # core_attrs path, core computation skipped, ``core`` comes back
+            # empty, exactly like ``plar_reduce(warm_start=...)``
+            forced_j = _validate_warm_start(c["warm_start"], A)
+            core_attrs[j, : len(forced_j)] = forced_j
+            core_counts[j] = len(forced_j)
+        elif c["compute_core"]:
             gran_j = gran if c["seed"] is None else dataclasses.replace(
                 gran, w=jnp.asarray(w_j), n_total=jnp.int32(n_j))
             inner = _core_inner_thetas(gran_j, c["delta"], exact=exact)
@@ -813,9 +887,9 @@ def plar_reduce_ensemble(
             core_j = [int(a) for a in range(A)
                       if sig[a] > c["eps"] + c["tie_tol"]]
             evals0[j] = A
+            core_attrs[j, : len(core_j)] = core_j
+            core_counts[j] = len(core_j)
         cores.append(core_j)
-        core_attrs[j, : len(core_j)] = core_j
-        core_counts[j] = len(core_j)
 
     ops = EnsembleOperands(
         delta_idx=jnp.asarray(delta_idx),

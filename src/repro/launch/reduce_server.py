@@ -1,7 +1,8 @@
-"""Online reduct service demo (DESIGN.md §3.7):
+"""Online reduct service demo (DESIGN.md §3.7/§3.9):
 
     python -m repro.launch.reduce_server --dataset kdd99 --delta SCE
     python -m repro.launch.reduce_server --dataset shuttle --updates 8 --json
+    python -m repro.launch.reduce_server --clients 8 --serial   # PR 5 baseline
 
 Drives a paper dataset through :class:`repro.service.ReductServer` as a live
 stream: the first half of the table creates the dataset, the second half
@@ -12,6 +13,12 @@ reduct (warm-started selection) instead of recomputing it — the per-update
 latency column against the from-scratch recompute at the end is the point
 of the subsystem.  The final reduct is checked against a batch
 ``plar_reduce`` over the full table.
+
+``--clients K`` adds K concurrent mixed-measure clients per round: their
+queries land in one scheduler window and are served by stacked batched
+dispatch (§3.9); the closing metrics block shows batch occupancy, dedup
+hits, and sustained qps.  ``--serial`` runs the single-flight baseline
+instead; ``--max-queue`` bounds admission.
 """
 from __future__ import annotations
 
@@ -30,6 +37,13 @@ def main():
     ap.add_argument("--attrs", type=int, default=64, help="attribute cap")
     ap.add_argument("--updates", type=int, default=4,
                     help="update batches streaming in the second half")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="extra concurrent mixed-measure clients per round "
+                         "(exercises §3.9 batched dispatch)")
+    ap.add_argument("--serial", action="store_true",
+                    help="single-flight worker (the PR 5 baseline)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission-control queue depth")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -43,33 +57,42 @@ def main():
     half = len(x) // 2
     rest = len(x) - half
 
+    # K extra clients fan across the other measures (round-robin): a window
+    # of mixed-measure queries per round, served by ONE stacked dispatch
+    others = [m for m in ("PR", "SCE", "LCE", "CCE") if m != args.delta]
+    client_measures = [others[i % len(others)] for i in range(args.clients)]
+
     async def drive():
-        async with ReductServer() as srv:
+        async with ReductServer(batching=not args.serial,
+                                max_queue=args.max_queue) as srv:
             await srv.submit("live", x[:half], d[:half],
                              n_dec=stream.n_dec, v_max=stream.v_max)
             events = []
-            t0 = time.perf_counter()
-            r = await srv.query("live", delta=args.delta)
-            events.append({"event": "cold", "rows": half,
-                           "granules": srv.handle("live").n_granules,
-                           "reduct": r.reduct,
-                           "latency_s": round(time.perf_counter() - t0, 3)})
+
+            async def round_query(tag, rows):
+                t0 = time.perf_counter()
+                coros = [srv.query("live", delta=args.delta)]
+                coros += [srv.query("live", delta=m) for m in client_measures]
+                rs = await asyncio.gather(*coros)
+                req = srv.requests[-1]
+                events.append({
+                    "event": tag, "rows": rows,
+                    "granules": srv.handle("live").n_granules,
+                    "reduct": rs[0].reduct,
+                    "prefix_kept": req.prefix_kept,
+                    "clients": 1 + len(client_measures),
+                    "latency_s": round(time.perf_counter() - t0, 3)})
+                return rs[0]
+
+            r = await round_query("cold", half)
             for i in range(args.updates):
                 lo = half + i * rest // args.updates
                 hi = half + (i + 1) * rest // args.updates
                 await srv.update("live", x[lo:hi], d[lo:hi])
-                t0 = time.perf_counter()
-                r = await srv.query("live", delta=args.delta)
-                req = srv.requests[-1]
-                events.append({
-                    "event": f"update_{i + 1}", "rows": hi - lo,
-                    "granules": srv.handle("live").n_granules,
-                    "reduct": r.reduct,
-                    "prefix_kept": req.prefix_kept,
-                    "latency_s": round(time.perf_counter() - t0, 3)})
-            return r, events, dict(srv.stats)
+                r = await round_query(f"update_{i + 1}", hi - lo)
+            return r, events, dict(srv.stats), srv.metrics.summary()
 
-    final, events, stats = asyncio.run(drive())
+    final, events, stats, metrics = asyncio.run(drive())
 
     # the from-scratch baseline the incremental path replaces
     t0 = time.perf_counter()
@@ -81,7 +104,9 @@ def main():
     out = {
         "dataset": args.dataset, "delta": args.delta,
         "table_shape": [len(x), x.shape[1]],
-        "events": events, "stats": stats,
+        "scheduler": "single-flight" if args.serial else "batched",
+        "clients": 1 + len(client_measures),
+        "events": events, "stats": stats, "metrics": metrics,
         "final_reduct": final.reduct,
         "batch_reduct": batch.reduct,
         "reduct_matches_batch": final.reduct == batch.reduct,
@@ -99,6 +124,12 @@ def main():
                   f"reduct={e['reduct']}{extra}")
         print(f"\nfull recompute: {out['full_recompute_s']}s   "
               f"mean update latency: {out['mean_update_latency_s']}s")
+        print(f"scheduler={out['scheduler']} clients={out['clients']}  "
+              f"engine_runs={stats['engine_runs']} "
+              f"dedup_hits={stats['dedup_hits']} "
+              f"occupancy={metrics['mean_batch_occupancy']} "
+              f"qps={metrics['qps_sustained']} "
+              f"latency_p99={metrics['latency_p99_s']}s")
         print(f"final reduct matches batch plar_reduce: "
               f"{out['reduct_matches_batch']}")
 

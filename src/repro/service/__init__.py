@@ -1,15 +1,21 @@
-"""Online attribute-reduction service (DESIGN.md §3.7).
+"""Online attribute-reduction service (DESIGN.md §3.7/§3.9).
 
 Turns the batch reproduction into a stateful subsystem: a device-resident
 granularity absorbs row-batch deltas through the §3.6 monoid merge, and
 reducts are repaired by warm-starting the §3.5 selection engine from the
-previous result instead of recomputing from an empty reduct.
+previous result instead of recomputing from an empty reduct.  The serving
+tier is multi-tenant: a scheduler batches compatible concurrent queries
+into stacked engine dispatches, deduplicates identical in-flight queries,
+and bounds the queue with fail-fast admission control.
 """
+from .metrics import RequestTiming, ServiceMetrics, percentile
+from .scheduler import Scheduler, ServerOverloaded
 from .server import ReduceRequest, ReductServer
 from .state import (
     DatasetHandle,
     granularity_fingerprint,
     repair_reduce,
+    repair_reduce_many,
     valid_prefix_len,
 )
 
@@ -17,7 +23,13 @@ __all__ = [
     "DatasetHandle",
     "ReduceRequest",
     "ReductServer",
+    "RequestTiming",
+    "Scheduler",
+    "ServerOverloaded",
+    "ServiceMetrics",
     "granularity_fingerprint",
+    "percentile",
     "repair_reduce",
+    "repair_reduce_many",
     "valid_prefix_len",
 ]

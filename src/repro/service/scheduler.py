@@ -1,0 +1,341 @@
+"""Multi-tenant batched dispatch for the reduct server (DESIGN.md §3.9).
+
+The PR 5 worker was single-flight: one queue, one request per engine
+dispatch.  This scheduler replaces it with *cross-query batching* — the
+continuous-batching idiom of ``serving/engine.py`` applied to attribute
+reduction:
+
+* **Window** — when a request is picked up, the queue is drained
+  non-blocking; everything already queued forms the batching window.
+  Requests arriving during a dispatch wait for the next window, so the
+  window needs no timer and adds zero latency to a lone request.
+* **Grouping** — window requests are grouped per dataset.  Within a
+  dataset, cache misses whose ``(delta, params)`` can be expressed on the
+  stacked §3.8 engine (``partition_reduce_params``) and whose *shared*
+  knobs agree are served by ONE ``DatasetHandle.reduce_many`` dispatch:
+  heterogeneous per-config knobs (measure, tol, max_features, ...) ride
+  the traced `EnsembleOperands`, warm members resume from their previous
+  reducts via the per-config ``warm_start`` operand.  Results are
+  byte-identical to serving each query alone (stacked-vs-sequential
+  parity, §3.8 + §3.7 repair), so answers never depend on grouping.
+* **Merge/dispatch overlap** — each dataset's pending update batches are
+  coalesced into one monoid merge on a worker thread; merges for datasets
+  B, C, ... run while dataset A's engine dispatch is in flight (engine
+  dispatches themselves stay serialized — JAX serializes them anyway, and
+  serializing keeps the §3.7 coalescing window well-defined per dataset).
+* **Admission control** — the queue is bounded; over-capacity submits
+  fail fast with :class:`ServerOverloaded` (raised by the server's
+  ``query``/``query_ensemble``, defined here with the scheduler because it
+  is the scheduler's capacity being protected).
+
+The scheduler runs as one asyncio task inside :class:`ReductServer`; all
+JAX work happens in ``asyncio.to_thread`` so the event loop keeps
+admitting, deduplicating, and rejecting while engines run.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.reduction import partition_reduce_params
+
+__all__ = ["Scheduler", "ServerOverloaded"]
+
+
+class ServerOverloaded(RuntimeError):
+    """Raised by ``query``/``query_ensemble`` when the bounded request
+    queue is full: the submit fails fast instead of growing the queue
+    unboundedly (admission control, DESIGN.md §3.9)."""
+
+
+class _Work:
+    """One dataset's share of a batching window: its requests (arrival
+    order) and the update batches captured for its coalesced merge."""
+
+    __slots__ = ("dataset", "requests", "batches", "merge_error")
+
+    def __init__(self, dataset: str) -> None:
+        self.dataset = dataset
+        self.requests: List[Any] = []
+        self.batches: List[Tuple[np.ndarray, np.ndarray]] = []
+        self.merge_error: Optional[BaseException] = None
+
+
+class Scheduler:
+    """Drains the server queue in windows and dispatches batched work.
+
+    ``batching=False`` degrades to the PR 5 single-flight worker — one
+    request per window, solo dispatch — which is the benchmark baseline
+    (``benchmarks/serve_bench.py``).
+    """
+
+    def __init__(self, server, *, batching: bool = True) -> None:
+        self.srv = server
+        self.batching = batching
+
+    # -- the worker loop ----------------------------------------------------
+
+    async def run(self, stop_marker: object) -> None:
+        queue = self.srv._queue
+        while True:
+            req = await queue.get()
+            if req is stop_marker or self.srv._stopping:
+                self._shutdown(stop_marker,
+                               [] if req is stop_marker else [req])
+                return
+            window = [req]
+            if self.batching:
+                # the batching window: everything already queued rides along
+                while True:
+                    try:
+                        nxt = queue.get_nowait()
+                    except asyncio.QueueEmpty:
+                        break
+                    if nxt is stop_marker:
+                        self._shutdown(stop_marker, window)
+                        return
+                    window.append(nxt)
+            works = self._plan(window)
+            await self._execute(works)
+
+    def _shutdown(self, stop_marker: object, pending: List[Any]) -> None:
+        """Drain the queue on stop: queued-but-unstarted requests fail fast
+        with ``RuntimeError("server stopped")`` instead of hanging forever
+        (their work will never run)."""
+        queue = self.srv._queue
+        while True:
+            try:
+                nxt = queue.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            if nxt is not stop_marker:
+                pending.append(nxt)
+        for req in pending:
+            if not req.future.done():
+                req.future.set_exception(RuntimeError("server stopped"))
+
+    # -- planning (event loop: may touch _pending without locks) ------------
+
+    def _plan(self, window: List[Any]) -> List[_Work]:
+        """Group the window per dataset (first-arrival order) and capture
+        each dataset's pending update batches for the coalesced merge."""
+        works: Dict[str, _Work] = {}
+        for req in window:
+            work = works.get(req.dataset)
+            if work is None:
+                work = works[req.dataset] = _Work(req.dataset)
+            work.requests.append(req)
+        for work in works.values():
+            work.batches = self.srv._pending.pop(work.dataset, [])
+        return list(works.values())
+
+    # -- execution ----------------------------------------------------------
+
+    async def _execute(self, works: List[_Work]) -> None:
+        # kick every dataset's coalescing merge off immediately: dataset B's
+        # host-side merge overlaps dataset A's engine dispatch (the
+        # continuous-batching overlap; handles are disjoint per dataset and
+        # the result cache is lock-guarded)
+        merges = {
+            work.dataset: asyncio.create_task(
+                asyncio.to_thread(self._merge, work))
+            for work in works
+        }
+        for work in works:
+            await merges[work.dataset]
+            if work.merge_error is not None:
+                outcomes = [(req, ("err", work.merge_error))
+                            for req in work.requests]
+            else:
+                outcomes = await asyncio.to_thread(self._dispatch, work)
+            for req, (kind, payload) in outcomes:
+                if req.future.cancelled():
+                    continue
+                if kind == "ok":
+                    req.future.set_result(payload)
+                else:
+                    req.future.set_exception(payload)
+
+    def _merge(self, work: _Work) -> None:
+        """Coalesce one dataset's buffered update batches into ONE monoid
+        merge, then evict the dataset's superseded cache entries (runs on a
+        worker thread; may overlap another dataset's engine dispatch)."""
+        srv = self.srv
+        if not work.batches:
+            return
+        try:
+            handle = srv._handles[work.dataset]
+            xs = np.concatenate([b[0] for b in work.batches])
+            ds = np.concatenate([b[1] for b in work.batches])
+            handle.update(xs, ds)
+            srv._bump("merges", 1)
+            srv._bump("coalesced_batches", len(work.batches))
+            # content moved on: superseded-fingerprint entries can never hit
+            # again — O(evicted) via the per-dataset fingerprint index
+            srv._evict_stale(work.dataset, handle.fingerprint)
+        except BaseException as e:  # surfaced to every request of this work
+            work.merge_error = e
+
+    def _dispatch(self, work: _Work) -> List[Tuple[Any, Tuple[str, Any]]]:
+        """Serve one dataset's window share (runs on a worker thread).
+
+        Cache probes first; misses that fit the stacked engine group into
+        ``reduce_many`` dispatches (identical configs collapse — the
+        window-level half of in-flight dedup); everything else runs solo.
+        """
+        srv = self.srv
+        handle = srv._handles[work.dataset]
+        fp = handle.fingerprint
+        for req in work.requests:
+            req.timing.mark_start()
+            req.merged_batches = len(work.batches)
+
+        outcome: Dict[int, Tuple[str, Any]] = {}
+        # stackable misses: group key (sorted shared items) → list of
+        # (config, params-dict, [requests])  — identical configs share slots
+        groups: Dict[tuple, List[Tuple[dict, dict, List[Any]]]] = {}
+
+        for req in work.requests:
+            srv._bump("queries", 1)
+            if req.configs is not None:
+                outcome[req.rid] = self._serve_ensemble(handle, req, fp)
+                continue
+            key = (work.dataset, fp, req.delta, req.params)
+            hit = srv._cache_get(key)
+            if hit is not None:
+                req.cached = True
+                srv._bump("cache_hits", 1)
+                outcome[req.rid] = ("ok", hit)
+                continue
+            params = dict(req.params)
+            split = partition_reduce_params(req.delta, params)
+            if split is None or not self.batching:
+                outcome[req.rid] = self._serve_solo(handle, req, key, params)
+                continue
+            config, shared = split
+            gkey = tuple(sorted(shared.items()))
+            members = groups.setdefault(gkey, [])
+            for cfg, _p, reqs in members:
+                if cfg == config:          # in-window dedup: same config,
+                    reqs.append(req)       # one engine slot
+                    break
+            else:
+                members.append((config, params, [req]))
+
+        for gkey, members in groups.items():
+            self._serve_group(handle, dict(gkey), members, fp, outcome)
+
+        results: List[Tuple[Any, Tuple[str, Any]]] = []
+        for req in work.requests:
+            req.timing.mark_done()
+            req.latency_s = req.timing.service_s
+            srv.metrics.observe(req.timing, req.batch_size)
+            srv.requests.append(req)
+            results.append((req, outcome[req.rid]))
+        return results
+
+    # -- dispatch units ------------------------------------------------------
+
+    def _serve_solo(self, handle, req, key, params) -> Tuple[str, Any]:
+        """The PR 5 path: one query, one engine run (warm repair when the
+        handle knows a previous result) — for queries the stacked engine
+        cannot express, and every query of a ``batching=False`` server."""
+        srv = self.srv
+        try:
+            result = handle.reduce(req.delta, **params)
+        except BaseException as e:
+            return ("err", e)
+        srv._cache_put(key, result)
+        req.warm = handle.last_was_warm
+        req.prefix_kept = handle.last_prefix_kept
+        req.batch_size = 1
+        srv._bump("warm" if req.warm else "cold", 1)
+        srv._bump("engine_runs", 1)
+        srv.metrics.observe_dispatch(1)
+        return ("ok", result)
+
+    def _serve_group(self, handle, shared: dict, members, fp,
+                     outcome: Dict[int, Tuple[str, Any]]) -> None:
+        """One stacked ``reduce_many`` dispatch for a shared-knob group of
+        heterogeneous configs; results fan out to every deduped request."""
+        srv = self.srv
+        if len(members) == 1:
+            # a lone config gains nothing from stacking: keep the PR 5 solo
+            # warm-repair path (byte-identical either way — §3.8 parity)
+            _cfg, params, reqs = members[0]
+            lead = reqs[0]
+            key = (lead.dataset, fp, lead.delta, lead.params)
+            out = self._serve_solo(handle, lead, key, params)
+            for req in reqs:
+                req.warm = lead.warm
+                req.prefix_kept = lead.prefix_kept
+                req.batch_size = lead.batch_size
+                outcome[req.rid] = out
+            return
+        queries = [(cfg["delta"], {k: v for k, v in cfg.items()
+                                   if k != "delta"})
+                   for cfg, _p, _r in members]
+        n_queries = sum(len(reqs) for _c, _p, reqs in members)
+        try:
+            results, kept, was_warm = handle.reduce_many(queries, **shared)
+        except BaseException as e:
+            for _cfg, _params, reqs in members:
+                for req in reqs:
+                    outcome[req.rid] = ("err", e)
+            return
+        srv._bump("engine_runs", 1)
+        srv.metrics.observe_dispatch(n_queries)
+        for (cfg, params, reqs), result, k, warm in zip(
+                members, results, kept, was_warm):
+            key = (reqs[0].dataset, fp, reqs[0].delta, reqs[0].params)
+            srv._cache_put(key, result)
+            srv._bump("warm" if warm else "cold", 1)
+            for req in reqs:
+                req.warm = warm
+                req.prefix_kept = k
+                req.batch_size = n_queries
+                outcome[req.rid] = ("ok", result)
+
+    def _serve_ensemble(self, handle, req, fp) -> Tuple[str, Any]:
+        """Serve a ``query_ensemble`` grid: per-config cache probes, one
+        stacked run for exactly the missing configs (DESIGN.md §3.8)."""
+        srv = self.srv
+        shared = dict(req.params)
+        srv._bump("ensemble_queries", 1)
+        srv._bump("ensemble_configs", len(req.configs))
+
+        grid = [dict(items) for items in req.configs]
+        keys = []
+        for c in grid:
+            delta = c.get("delta", "PR")
+            params = {**shared,
+                      **{k: v for k, v in c.items() if k != "delta"}}
+            keys.append((req.dataset, fp, delta,
+                         tuple(sorted(params.items()))))
+
+        results: List[Optional[Any]] = []
+        misses: List[int] = []
+        for j, key in enumerate(keys):
+            hit = srv._cache_get(key)
+            if hit is not None:
+                srv._bump("cache_hits", 1)
+            else:
+                misses.append(j)
+            results.append(hit)
+        if misses:
+            try:
+                fresh = handle.reduce_ensemble(
+                    [grid[j] for j in misses], **shared)
+            except BaseException as e:
+                return ("err", e)
+            srv._bump("engine_runs", 1)
+            srv.metrics.observe_dispatch(len(misses))
+            for j, r in zip(misses, fresh):
+                srv._cache_put(keys[j], r)
+                results[j] = r
+            srv._bump("cold", len(misses))
+        req.cached = not misses
+        req.batch_size = len(misses)
+        return ("ok", results)

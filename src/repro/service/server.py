@@ -1,8 +1,10 @@
-"""Async online reduct server: queue + worker, coalesced updates, result cache.
+"""Async multi-tenant reduct server: batched dispatch, dedup, admission.
 
-The serving layer of DESIGN.md §3.7, shaped like ``serving/engine.py``'s
-Request pattern: requests enter an asyncio queue, one worker drains it, and
-the expensive JAX work runs in a thread so the event loop stays responsive.
+The serving layer of DESIGN.md §3.7/§3.9, shaped like ``serving/engine.py``'s
+Request pattern: requests enter a *bounded* asyncio queue, one scheduler
+task (:class:`~repro.service.scheduler.Scheduler`) drains it in windows,
+and the expensive JAX work runs in threads so the event loop stays
+responsive for admission, dedup, and rejection.
 
 Operations:
 
@@ -14,41 +16,76 @@ Operations:
   concat + one ``merge_granularity``, not k (the §3.6 merge is a monoid, so
   coalescing is exact);
 * ``query(name, delta, **params)`` — reduct for the dataset's *current*
-  content (pending updates drain first).  Results are cached by
-  ``(dataset, content fingerprint, measure, params)``; a repeat query on
-  unchanged content is a dictionary hit, a changed fingerprint falls
-  through to the handle's warm validate-and-repair path (state.py), and a
-  merge evicts the dataset's superseded-fingerprint entries (they can
-  never hit again), keeping the cache bounded by live content;
+  content (pending updates drain first).  Served through two cache tiers:
+
+  - **in-flight dedup** — an identical query (same dataset *content
+    epoch*, measure, normalized params) that arrives while one is already
+    queued or running awaits the same future instead of re-running;
+  - **result cache** — keyed ``(dataset, content fingerprint, measure,
+    normalized params)``; a repeat query on unchanged content is a
+    dictionary hit, a changed fingerprint falls through to the handle's
+    warm validate-and-repair path (state.py), and a merge evicts the
+    dataset's superseded-fingerprint entries through a per-dataset
+    fingerprint index (O(evicted), not O(total cache));
+
 * ``query_ensemble(name, configs, seeds=..., **shared)`` — a whole config
   grid in one stacked engine dispatch (DESIGN.md §3.8), cached per config
   under the same key shape: only the grid's cache *misses* are re-run (as
   a smaller stacked grid).
 
-The worker is deliberately single-flight: JAX dispatch is serialized anyway,
-and one worker makes the coalescing window well-defined (everything buffered
-before a query's turn merges ahead of it).
+Cross-query batching: compatible single-config cache misses that share a
+scheduler window are answered by ONE stacked ``reduce_many`` dispatch
+(§3.9) — byte-identical to serving each alone.  ``batching=False``
+restores the PR 5 single-flight worker (the benchmark baseline).
+
+Admission control: the queue depth is bounded (``max_queue``); when it is
+full, ``query``/``query_ensemble`` fail fast with
+:class:`~repro.service.scheduler.ServerOverloaded` instead of queueing
+unboundedly.  ``stop()`` fails queued-but-unstarted requests with
+``RuntimeError("server stopped")`` — futures never hang across shutdown.
 """
 from __future__ import annotations
 
 import asyncio
 import collections
 import dataclasses
-import time
-from typing import Any, Deque, Dict, List, Optional, Tuple
+import threading
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core.reduction import ReductionResult, expand_ensemble_grid
 
+from .metrics import RequestTiming, ServiceMetrics
+from .scheduler import Scheduler, ServerOverloaded
 from .state import DatasetHandle
 
-__all__ = ["ReductServer", "ReduceRequest"]
+__all__ = ["ReductServer", "ReduceRequest", "ServerOverloaded"]
 
 _STOP = object()
 
 # Completed-request log depth (introspection/stats only — not correctness).
 _REQUEST_LOG = 1024
+
+# Key params consumed at f32 precision by the engine (measures.f32_threshold):
+# f32-rounding them in cache/dedup keys conflates only queries whose
+# thresholds the engine cannot tell apart.
+_F32_KEY_PARAMS = ("tol", "tie_tol")
+
+
+def _norm_key_value(key: str, value: Any) -> Any:
+    """Normalize one cache/dedup key value (the PR 6 engine-factory idiom):
+    numpy scalars become python scalars, f32-consumed thresholds round to
+    f32 — so ``np.float32(0.01)`` and ``0.01`` hash to ONE key."""
+    if isinstance(value, np.generic):
+        value = value.item()
+    if key in _F32_KEY_PARAMS and isinstance(value, float):
+        value = float(np.float32(value))
+    return value
+
+
+def _norm_items(params: Dict[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted((k, _norm_key_value(k, v)) for k, v in params.items()))
 
 
 @dataclasses.dataclass
@@ -63,49 +100,81 @@ class ReduceRequest:
     # ensemble queries: the expanded config grid (sorted-items tuples);
     # None marks a single-config query
     configs: Optional[Tuple[Tuple[Tuple[str, Any], ...], ...]] = None
-    # filled by the worker:
+    # latency accounting (shared shape with serving/engine.py):
+    timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
+    # filled by the scheduler:
     cached: bool = False
     warm: bool = False
     prefix_kept: int = 0
     merged_batches: int = 0
+    batch_size: int = 0   # queries served by this request's engine dispatch
     latency_s: float = 0.0
 
 
 class ReductServer:
-    """Stateful attribute-reduction service over evolving decision tables."""
+    """Stateful attribute-reduction service over evolving decision tables.
 
-    def __init__(self) -> None:
+    ``max_queue`` bounds the request queue (admission control);
+    ``batching=False`` restores the PR 5 single-flight worker with dedup
+    disabled — the serve-benchmark baseline.
+    """
+
+    def __init__(self, *, max_queue: int = 1024,
+                 batching: bool = True) -> None:
+        self._max_queue = int(max_queue)
+        self._batching = bool(batching)
         # None marks a name reserved by an in-flight submit()
         self._handles: Dict[str, Optional[DatasetHandle]] = {}
         self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
-        # keyed (dataset, fingerprint, measure, params); entries for a
-        # dataset's superseded fingerprints are evicted when a merge lands
+        # content epoch per dataset: bumped on every update(); dedup keys
+        # carry it so only queries over the same eventual content share a
+        # future (the fingerprint is not known until the merge lands)
+        self._epoch: Dict[str, int] = {}
+        # result cache, keyed (dataset, fingerprint, measure, params), plus
+        # a dataset → fingerprint → keys index so stale eviction touches
+        # only the evicted entries
         self._cache: Dict[tuple, ReductionResult] = {}
+        self._cache_index: Dict[str, Dict[int, Set[tuple]]] = {}
+        self._lock = threading.Lock()
+        # in-flight dedup tier: dedup key → the future already serving it
+        self._inflight: Dict[tuple, asyncio.Future] = {}
         self._queue: Optional[asyncio.Queue] = None
         self._worker: Optional[asyncio.Task] = None
+        self._stopping = False
         self._rid = 0
         self.requests: Deque[ReduceRequest] = collections.deque(
             maxlen=_REQUEST_LOG)
+        self.metrics = ServiceMetrics()
         self.stats = {"queries": 0, "cache_hits": 0, "warm": 0, "cold": 0,
                       "merges": 0, "updates": 0, "coalesced_batches": 0,
-                      "ensemble_queries": 0, "ensemble_configs": 0}
+                      "ensemble_queries": 0, "ensemble_configs": 0,
+                      "dedup_hits": 0, "rejected": 0, "engine_runs": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> "ReductServer":
         if self._worker is not None:
             raise RuntimeError("server already started")
-        self._queue = asyncio.Queue()
-        self._worker = asyncio.create_task(self._worker_loop())
+        self._queue = asyncio.Queue(maxsize=self._max_queue)
+        self._scheduler = Scheduler(self, batching=self._batching)
+        self._worker = asyncio.create_task(self._scheduler.run(_STOP))
         return self
 
     async def stop(self) -> None:
+        """Stop the scheduler.  The window being dispatched completes; every
+        queued-but-unstarted request fails fast with
+        ``RuntimeError("server stopped")`` (futures never hang)."""
         if self._worker is None:
             return
-        await self._queue.put(_STOP)
-        await self._worker
-        self._worker = None
-        self._queue = None
+        self._stopping = True
+        try:
+            await self._queue.put(_STOP)
+            await self._worker
+        finally:
+            self._worker = None
+            self._queue = None
+            self._inflight.clear()
+            self._stopping = False
 
     async def __aenter__(self) -> "ReductServer":
         return await self.start()
@@ -145,20 +214,34 @@ class ReductServer:
         handle = self._require(name)
         x, d = handle.validate_batch(x, d)
         self._pending.setdefault(name, []).append((x, d))
+        self._epoch[name] = self._epoch.get(name, 0) + 1
         self.stats["updates"] += 1
 
     async def query(self, name: str, delta: str = "PR",
                     **params) -> ReductionResult:
-        """Reduct for the dataset's current content (pending updates included)."""
+        """Reduct for the dataset's current content (pending updates included).
+
+        Raises :class:`ServerOverloaded` when the bounded queue is full."""
         self._require(name)
-        if self._queue is None:
-            raise RuntimeError("server not started (use 'async with' or start())")
+        self._ensure_running()
+        params_t = _norm_items(params)
+        dkey = None
+        if self._batching:
+            dkey = (name, self._epoch.get(name, 0), delta, params_t, None)
+            fut = self._inflight.get(dkey)
+            if fut is not None:  # in-flight dedup: ride the running query
+                self._bump("dedup_hits", 1)
+                self.metrics.inc("dedup_hits")
+                return await asyncio.shield(fut)
         self._rid += 1
         req = ReduceRequest(
-            rid=self._rid, dataset=name, delta=delta,
-            params=tuple(sorted(params.items())),
-            future=asyncio.get_running_loop().create_future())
-        await self._queue.put(req)
+            rid=self._rid, dataset=name, delta=delta, params=params_t,
+            future=asyncio.get_running_loop().create_future(),
+            timing=RequestTiming().mark_enqueue())
+        self._admit(req, dkey)
+        if dkey is not None:
+            # shield: a cancelled caller must not cancel a shared future
+            return await asyncio.shield(req.future)
         return await req.future
 
     async def query_ensemble(self, name: str, configs, *, seeds=None,
@@ -174,22 +257,68 @@ class ReductServer:
         (``configs`` × ``seeds``).
         """
         self._require(name)
-        if self._queue is None:
-            raise RuntimeError("server not started (use 'async with' or start())")
+        self._ensure_running()
         grid = expand_ensemble_grid(configs, seeds)
+        params_t = _norm_items(shared)
+        configs_t = tuple(_norm_items(c) for c in grid)
+        dkey = None
+        if self._batching:
+            dkey = (name, self._epoch.get(name, 0), "<ensemble>", params_t,
+                    configs_t)
+            fut = self._inflight.get(dkey)
+            if fut is not None:
+                self._bump("dedup_hits", 1)
+                self.metrics.inc("dedup_hits")
+                return await asyncio.shield(fut)
         self._rid += 1
         req = ReduceRequest(
-            rid=self._rid, dataset=name, delta="<ensemble>",
-            params=tuple(sorted(shared.items())),
-            configs=tuple(tuple(sorted(c.items())) for c in grid),
-            future=asyncio.get_running_loop().create_future())
-        await self._queue.put(req)
+            rid=self._rid, dataset=name, delta="<ensemble>", params=params_t,
+            configs=configs_t,
+            future=asyncio.get_running_loop().create_future(),
+            timing=RequestTiming().mark_enqueue())
+        self._admit(req, dkey)
+        if dkey is not None:
+            return await asyncio.shield(req.future)
         return await req.future
 
     def handle(self, name: str) -> DatasetHandle:
         return self._require(name)
 
-    # -- worker -------------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """One flat dict: counters + aggregate serving metrics."""
+        out = dict(self.stats)
+        out.update(self.metrics.summary())
+        return out
+
+    # -- admission / dedup (event loop) -------------------------------------
+
+    def _ensure_running(self) -> None:
+        if self._stopping:
+            raise RuntimeError("server stopped")
+        if self._queue is None:
+            raise RuntimeError(
+                "server not started (use 'async with' or start())")
+
+    def _admit(self, req: ReduceRequest, dkey: Optional[tuple]) -> None:
+        try:
+            self._queue.put_nowait(req)
+        except asyncio.QueueFull:
+            self._bump("rejected", 1)
+            self.metrics.inc("rejected")
+            raise ServerOverloaded(
+                f"request queue full (max_queue={self._max_queue}); "
+                f"retry after the backlog drains") from None
+        if dkey is not None:
+            self._inflight[dkey] = req.future
+            req.future.add_done_callback(self._inflight_cleanup(dkey))
+
+    def _inflight_cleanup(self, dkey: tuple):
+        def _done(fut: asyncio.Future) -> None:
+            if self._inflight.get(dkey) is fut:
+                del self._inflight[dkey]
+        return _done
+
+    # -- shared state used by the scheduler (threads) -----------------------
 
     def _require(self, name: str) -> DatasetHandle:
         handle = self._handles.get(name)
@@ -197,93 +326,27 @@ class ReductServer:
             raise KeyError(f"unknown dataset: {name!r}")
         return handle
 
-    async def _worker_loop(self) -> None:
-        while True:
-            req = await self._queue.get()
-            if req is _STOP:
+    def _bump(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self.stats[name] = self.stats.get(name, 0) + by
+
+    def _cache_get(self, key: tuple) -> Optional[ReductionResult]:
+        with self._lock:
+            return self._cache.get(key)
+
+    def _cache_put(self, key: tuple, value) -> None:
+        with self._lock:
+            self._cache[key] = value
+            self._cache_index.setdefault(key[0], {}).setdefault(
+                key[1], set()).add(key)
+
+    def _evict_stale(self, dataset: str, live_fp: int) -> None:
+        """Drop a dataset's superseded-fingerprint entries: O(evicted) via
+        the fingerprint index, not a scan of the whole cache."""
+        with self._lock:
+            by_fp = self._cache_index.get(dataset)
+            if not by_fp:
                 return
-            # drain the coalescing buffer on the event loop (no lock needed:
-            # update() and this pop both run on the loop thread)
-            batches = self._pending.pop(req.dataset, [])
-            try:
-                result = await asyncio.to_thread(self._process, req, batches)
-                if not req.future.cancelled():
-                    req.future.set_result(result)
-            except Exception as e:  # surface to the awaiting caller
-                if not req.future.cancelled():
-                    req.future.set_exception(e)
-
-    def _process(self, req: ReduceRequest,
-                 batches: List[Tuple[np.ndarray, np.ndarray]]) -> ReductionResult:
-        t0 = time.perf_counter()
-        handle = self._handles[req.dataset]
-        if batches:
-            # coalesce: k buffered batches → one merge
-            xs = np.concatenate([b[0] for b in batches])
-            ds = np.concatenate([b[1] for b in batches])
-            handle.update(xs, ds)
-            self.stats["merges"] += 1
-            self.stats["coalesced_batches"] += len(batches)
-            # content moved on: results for superseded fingerprints of this
-            # dataset can never hit again — drop them (bounds the cache)
-            fp = handle.fingerprint
-            stale = [k for k in self._cache
-                     if k[0] == req.dataset and k[1] != fp]
-            for k in stale:
-                del self._cache[k]
-        self.stats["queries"] += 1
-        if req.configs is not None:
-            result = self._process_ensemble(req, handle)
-        else:
-            key = (req.dataset, handle.fingerprint, req.delta, req.params)
-            hit = self._cache.get(key)
-            if hit is not None:
-                req.cached = True
-                self.stats["cache_hits"] += 1
-                result = hit
-            else:
-                result = handle.reduce(req.delta, **dict(req.params))
-                self._cache[key] = result
-                req.warm = handle.last_was_warm
-                req.prefix_kept = handle.last_prefix_kept
-                self.stats["warm" if req.warm else "cold"] += 1
-        req.merged_batches = len(batches)
-        req.latency_s = time.perf_counter() - t0
-        self.requests.append(req)
-        return result
-
-    def _process_ensemble(self, req: ReduceRequest,
-                          handle: DatasetHandle) -> List[ReductionResult]:
-        """Serve a config grid: per-config cache probes, then one stacked
-        run for exactly the missing configs."""
-        shared = dict(req.params)
-        fp = handle.fingerprint
-        self.stats["ensemble_queries"] += 1
-        self.stats["ensemble_configs"] += len(req.configs)
-
-        grid = [dict(items) for items in req.configs]
-        keys = []
-        for c in grid:
-            delta = c.get("delta", "PR")
-            params = {**shared,
-                      **{k: v for k, v in c.items() if k != "delta"}}
-            keys.append((req.dataset, fp, delta, tuple(sorted(params.items()))))
-
-        results: List[Optional[ReductionResult]] = []
-        misses: List[int] = []
-        for j, key in enumerate(keys):
-            hit = self._cache.get(key)
-            if hit is not None:
-                self.stats["cache_hits"] += 1
-            else:
-                misses.append(j)
-            results.append(hit)
-        if misses:
-            fresh = handle.reduce_ensemble(
-                [grid[j] for j in misses], **shared)
-            for j, r in zip(misses, fresh):
-                self._cache[keys[j]] = r
-                results[j] = r
-            self.stats["cold"] += len(misses)
-        req.cached = not misses
-        return results
+            for fp in [f for f in by_fp if f != live_fp]:
+                for key in by_fp.pop(fp):
+                    self._cache.pop(key, None)

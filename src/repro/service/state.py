@@ -52,6 +52,7 @@ __all__ = [
     "granularity_fingerprint",
     "valid_prefix_len",
     "repair_reduce",
+    "repair_reduce_many",
 ]
 
 # Seeds for the content fingerprint — distinct from the GrC build seeds
@@ -142,6 +143,72 @@ def repair_reduce(gran: Granularity, prev_reduct: Sequence[int], *,
     result = plar_reduce(source=gran, delta=delta, warm_start=prev[:k],
                          **params)
     return result, k
+
+
+def repair_reduce_many(
+    gran: Granularity,
+    configs: Sequence[dict],
+    prevs: Sequence[Optional[Sequence[int]]],
+    **shared,
+) -> Tuple["list[ReductionResult]", "list[int]"]:
+    """The batched twin of :func:`repair_reduce`: one *stacked* dispatch
+    repairs (or cold-runs) a heterogeneous group of configs over one
+    granularity (DESIGN.md §3.9).
+
+    ``configs[j]`` is a per-config dict (``delta`` + §3.8 grid knobs);
+    ``prevs[j]`` is the previous reduct to warm-resume from (``None``/empty
+    = cold member: core computed, greedy from scratch).  The whole group
+    runs through ONE :func:`~repro.core.reduction.plar_reduce_ensemble`
+    call — warm members ride the per-config ``warm_start`` operand — then
+    every warm member validates its prefix with :func:`valid_prefix_len`,
+    and only the *trimmed* members re-run, again as one (smaller) stacked
+    grid.  Returns ``(results, prefix_kept)`` in input order.
+
+    Parity contract: member ``j`` is byte-identical (reduct + Θ history) to
+    the solo path — ``repair_reduce(gran, prevs[j], ...)`` when warm,
+    ``plar_reduce(source=gran, ...)`` when cold — because the stacked
+    engine's per-config trajectories are byte-identical to sequential runs
+    (§3.8) and the validate/trim/retry logic here is the same code path as
+    the solo repair.  Answers therefore never depend on how the serving
+    scheduler happened to group queries.
+    """
+    if len(configs) != len(prevs):
+        raise ValueError(
+            f"configs ({len(configs)}) and prevs ({len(prevs)}) must align")
+
+    def member(cfg: dict, prev) -> dict:
+        prev = [int(a) for a in prev] if prev else None
+        return {**cfg, "warm_start": prev} if prev else dict(cfg)
+
+    grid = [member(c, p) for c, p in zip(configs, prevs)]
+    results = list(plar_reduce_ensemble(source=gran, configs=grid, **shared))
+
+    kept = [0] * len(grid)
+    retry_idx: list = []
+    for j, (cfg, prev) in enumerate(zip(configs, prevs)):
+        if not prev:
+            continue
+        tol = float(cfg.get("tol", 1e-6))
+        tie_tol = float(cfg.get("tie_tol", 1e-5))
+        k = valid_prefix_len(
+            results[j].theta_history[: len(prev)], results[j].theta_full,
+            tol=tol, tie_tol=tie_tol)
+        kept[j] = k
+        if k < len(prev):
+            retry_idx.append(j)
+    if retry_idx:
+        # a fully-trimmed prefix retries with warm_start=[] — greedy from
+        # scratch with the core skipped, exactly repair_reduce's
+        # ``plar_reduce(warm_start=prev[:0])`` retry
+        retry_grid = [
+            {**configs[j],
+             "warm_start": [int(a) for a in prevs[j][: kept[j]]]}
+            for j in retry_idx
+        ]
+        fresh = plar_reduce_ensemble(source=gran, configs=retry_grid, **shared)
+        for j, r in zip(retry_idx, fresh):
+            results[j] = r
+    return results, kept
 
 
 @dataclasses.dataclass
@@ -263,6 +330,40 @@ class DatasetHandle:
             self.last_was_warm = False
         self._results[key] = r
         return r
+
+    def reduce_many(self, queries, **shared) -> "list[ReductionResult]":
+        """A heterogeneous group of single-config queries as ONE stacked
+        dispatch — the scheduler's batched hot path (DESIGN.md §3.9).
+
+        ``queries`` is a list of ``(delta, params)`` pairs whose ``params``
+        are per-config §3.8 grid knobs; ``shared`` holds the group's common
+        driver kwargs (``backend``, ``mode``, ...), with the handle's
+        ``exact`` mode riding along like :meth:`reduce`.  Each member
+        warm-resumes from the handle's previous result for the same config
+        when one exists (:func:`repair_reduce_many` — stacked validate/
+        trim/retry), runs cold otherwise, and lands in the per-config
+        result table under the same key :meth:`reduce` uses, so the two
+        paths warm-start each other.  Returns ``(results, prefix_kept,
+        was_warm)`` in query order; results are byte-identical to serving
+        each query alone through :meth:`reduce`.
+        """
+        shared = {"exact": self.exact, **shared}
+        configs, prevs, keys = [], [], []
+        for delta, params in queries:
+            config = {"delta": delta, **dict(params)}
+            key = self.ensemble_result_key(config, shared)
+            prev = self._results.get(key)
+            configs.append(config)
+            prevs.append(list(prev.reduct) if prev is not None else None)
+            keys.append(key)
+        results, kept = repair_reduce_many(self.gran, configs, prevs,
+                                           **shared)
+        for key, r in zip(keys, results):
+            self._results[key] = r
+        was_warm = [p is not None for p in prevs]
+        self.last_was_warm = any(was_warm)
+        self.last_prefix_kept = max(kept) if kept else 0
+        return results, kept, was_warm
 
     @staticmethod
     def ensemble_result_key(config: dict, shared: dict) -> tuple:

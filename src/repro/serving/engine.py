@@ -15,8 +15,8 @@ path, which is the point.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.config import ArchConfig
+from repro.service.metrics import RequestTiming
 
 
 @dataclasses.dataclass
@@ -33,6 +34,8 @@ class Request:
     prompt: np.ndarray              # [S] token ids
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # latency accounting (same stamp shape as service.ReduceRequest)
+    timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
     # filled by the engine:
     output: Optional[List[int]] = None
     latency_s: float = 0.0
@@ -58,7 +61,9 @@ class ServingEngine:
 
     def serve(self, requests: List[Request]) -> List[Request]:
         """Run all requests to completion with continuous batching."""
-        queue = list(requests)
+        queue = collections.deque(requests)   # popleft is O(1), not O(n)
+        for req in queue:
+            req.timing.mark_enqueue()
         # slots: per-slot state (cache is kept per-slot, batch=1, and decode
         # batches are formed by stacking slot caches — simple and correct;
         # a production engine would use a paged cache, noted in DESIGN.md)
@@ -66,13 +71,13 @@ class ServingEngine:
 
         def admit():
             while queue and len(live) < self.max_batch:
-                req = queue.pop(0)
-                t0 = time.perf_counter()
+                req = queue.popleft()
+                req.timing.mark_start()
                 logits, cache, lengths = self._prefill_one(req.prompt)
                 tok = int(jnp.argmax(logits[0, -1]))
                 live.append({
                     "req": req, "cache": cache, "lengths": lengths,
-                    "tokens": [tok], "t0": t0,
+                    "tokens": [tok],
                 })
 
         admit()
@@ -97,7 +102,8 @@ class ServingEngine:
                 hit_eos = req.eos_id is not None and int(nxt[i]) == req.eos_id
                 if len(slot["tokens"]) >= req.max_new_tokens or hit_eos:
                     req.output = slot["tokens"]
-                    req.latency_s = time.perf_counter() - slot["t0"]
+                    req.timing.mark_done()
+                    req.latency_s = req.timing.service_s
                     done_idx.append(i)
             for i in reversed(done_idx):
                 live.pop(i)

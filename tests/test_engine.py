@@ -290,9 +290,11 @@ def test_warm_start_validation():
         plar_reduce(x, d, warm_start=[-1])
     with pytest.raises(ValueError, match="integral"):
         plar_reduce(x, d, warm_start=[0.5])
-    with pytest.raises(ValueError, match="max_features"):
-        # a warm prefix longer than the feature cap can never be valid
-        plar_reduce(x, d, warm_start=[0, 1, 2], max_features=2)
+    # a warm prefix folds unconditionally (like a forced core): a prefix
+    # longer than max_features is legal, folds whole, and adds nothing —
+    # warm repair from a core-overflowed result must stay expressible
+    r = plar_reduce(x, d, warm_start=[0, 1, 2], max_features=2)
+    assert r.reduct == [0, 1, 2]
     # boundary: prefix length == max_features is allowed (pure re-eval)
     r = plar_reduce(x, d, warm_start=[0, 1], max_features=2)
     assert r.reduct == [0, 1]

@@ -1,0 +1,309 @@
+"""Multi-tenant serving tier (DESIGN.md §3.9): batched dispatch, dedup,
+admission control, metrics.
+
+The acceptance contract: K concurrent clients with mixed measures on one
+dataset are answered from ≤2 stacked dispatches with results byte-identical
+to solo ``query()`` calls; C identical concurrent queries collapse to ONE
+engine run; submits above the bounded queue depth fail fast with
+``ServerOverloaded`` and the server recovers after the backlog drains; and
+``stop()`` fails queued-but-unstarted futures instead of hanging them.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.reduction import (
+    partition_reduce_params,
+    plar_reduce,
+    plar_reduce_ensemble,
+)
+from repro.service import (
+    DatasetHandle,
+    ReductServer,
+    ServerOverloaded,
+    repair_reduce_many,
+)
+
+DELTAS = ["PR", "SCE", "LCE", "CCE"]
+
+
+def _table(seed, n, a, vmax=3, m=3, redundancy=0.5):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, vmax, size=(n, a)).astype(np.int32)
+    for j in range(1, a):
+        if rng.random() < redundancy:
+            x[:, j] = x[:, rng.integers(0, j)]
+    d = rng.integers(0, m, size=(n,)).astype(np.int32)
+    return x, d
+
+
+def _same_result(a, b):
+    assert a.reduct == b.reduct
+    assert np.array_equal(np.asarray(a.theta_history),
+                          np.asarray(b.theta_history))
+    assert a.theta_full == b.theta_full
+
+
+# ---------------------------------------------------------------------------
+# ensemble driver: per-config warm_start (the batched-repair enabler)
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_warm_start_matches_solo_warm():
+    """A stacked member with ``warm_start`` is byte-identical to the solo
+    ``plar_reduce(warm_start=...)`` run it batches — full prefix, partial
+    prefix, and a cold member in the same grid."""
+    x, d = _table(0, 500, 8)
+    solo_cold = plar_reduce(x, d, delta="PR")
+    prefix = solo_cold.reduct[:2]
+    grid = [
+        {"delta": "PR", "warm_start": solo_cold.reduct},
+        {"delta": "PR", "warm_start": prefix},
+        {"delta": "SCE"},
+    ]
+    stacked = plar_reduce_ensemble(x, d, configs=grid)
+    _same_result(stacked[0], plar_reduce(x, d, delta="PR",
+                                         warm_start=solo_cold.reduct))
+    _same_result(stacked[1], plar_reduce(x, d, delta="PR",
+                                         warm_start=prefix))
+    _same_result(stacked[2], plar_reduce(x, d, delta="SCE"))
+
+
+def test_ensemble_warm_start_validation():
+    x, d = _table(1, 200, 5)
+    with pytest.raises(ValueError, match="warm_start"):
+        plar_reduce_ensemble(
+            x, d, configs=[{"delta": "PR", "warm_start": [0, 0]}])
+    with pytest.raises(ValueError, match="warm_start"):
+        plar_reduce(x, d, delta="PR", warm_start=[99])
+
+
+def test_partition_reduce_params_split():
+    """Per-config knobs route to the stacked grid, shared knobs to the
+    dispatch; anything the ensemble cannot express refuses to split."""
+    split = partition_reduce_params("PR", {"tol": 1e-4, "backend": "segment"})
+    assert split is not None
+    config, shared = split
+    assert config == {"delta": "PR", "tol": 1e-4}
+    assert shared == {"backend": "segment"}
+    assert partition_reduce_params("PR", {"engine": "host"}) is None
+    assert partition_reduce_params("PR", {"backend": "fused"}) is None
+    assert partition_reduce_params("PR", {"mode": "sprak"}) is None
+
+
+def test_repair_reduce_many_matches_sequential_repair():
+    """Stacked warm repair over mixed measures == each measure's solo
+    repair, byte for byte, including a member whose prefix is trimmed."""
+    x, d = _table(2, 700, 9)
+    h = DatasetHandle.create(x[:500], d[:500], n_dec=3, v_max=3)
+    h2 = DatasetHandle.create(x[:500], d[:500], n_dec=3, v_max=3)
+    prevs = {m: h.reduce(m) for m in DELTAS}
+    for m in DELTAS:
+        h2.reduce(m)
+    for hh in (h, h2):
+        hh.update(x[500:], d[500:])
+    results, kept = repair_reduce_many(
+        h.gran, [{"delta": m} for m in DELTAS],
+        [prevs[m].reduct for m in DELTAS], exact=True)
+    for m, r, k in zip(DELTAS, results, kept):
+        solo = h2.reduce(m)      # solo warm path (repair_reduce)
+        _same_result(r, solo)
+        assert k <= len(prevs[m].reduct)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: batched dispatch + parity
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_clients_batched_into_stacked_dispatches():
+    """K clients × mixed measures/params on one dataset are served from ≤2
+    stacked dispatches, byte-identical to solo query() calls — through a
+    streaming update too (stacked warm repair)."""
+    x, d = _table(3, 800, 10)
+
+    async def drive():
+        specs = [("PR", {}), ("SCE", {}), ("LCE", {}), ("CCE", {}),
+                 ("PR", {"tol": 1e-4}), ("SCE", {"max_features": 3})]
+        async with ReductServer() as srv, ReductServer(batching=False) as ref:
+            for s in (srv, ref):
+                await s.submit("s", x[:600], d[:600], n_dec=3, v_max=3)
+            rs = await asyncio.gather(
+                *[srv.query("s", m, **p) for m, p in specs])
+            runs_cold = srv.stats["engine_runs"]
+            # cold twins from the single-flight reference server
+            for (m, p), r in zip(specs, rs):
+                _same_result(r, await ref.query("s", m, **p))
+            # firehose round: update lands, then another concurrent window
+            for s in (srv, ref):
+                await s.update("s", x[600:], d[600:])
+            rs2 = await asyncio.gather(
+                *[srv.query("s", m, **p) for m, p in specs])
+            runs_warm = srv.stats["engine_runs"] - runs_cold
+            # warm twins: solo warm repair vs stacked warm repair
+            for (m, p), r2 in zip(specs, rs2):
+                _same_result(r2, await ref.query("s", m, **p))
+            assert runs_cold <= 2
+            assert runs_warm <= 2
+            occ = srv.metrics.mean_occupancy()
+            assert occ > 1.0  # real cross-query batching happened
+            assert srv.metrics.counters["engine_dispatches"] == \
+                srv.stats["engine_runs"]
+
+    asyncio.run(drive())
+
+
+def test_unbatchable_params_fall_back_to_solo():
+    """Params the stacked engine cannot express (engine='host') still work —
+    they take the solo path inside the same window."""
+    x, d = _table(4, 400, 6)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("s", x, d, n_dec=3, v_max=3)
+            r_host, r_dev = await asyncio.gather(
+                srv.query("s", "PR", engine="host"),
+                srv.query("s", "SCE"))
+            solo = plar_reduce(x, d, delta="PR", engine="host")
+            assert r_host.reduct == solo.reduct
+            assert r_dev.reduct  # served, from the same window
+
+    asyncio.run(drive())
+
+
+def test_inflight_dedup_collapses_identical_queries():
+    """C identical concurrent queries → exactly 1 engine run; every caller
+    gets the same result object.  Numpy-scalar params dedup with python
+    floats (normalized keys)."""
+    x, d = _table(5, 500, 8)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("s", x, d, n_dec=3, v_max=3)
+            tols = [1e-4, np.float32(1e-4), np.float64(1e-4), 1e-4, 1e-4]
+            rs = await asyncio.gather(
+                *[srv.query("s", "PR", tol=t) for t in tols])
+            assert srv.stats["engine_runs"] == 1
+            assert srv.stats["dedup_hits"] == len(tols) - 1
+            assert all(r is rs[0] for r in rs)
+
+    asyncio.run(drive())
+
+
+def test_result_cache_key_normalization():
+    """Sequential repeats with numpy-scalar params hit the result cache
+    instead of minting distinct entries."""
+    x, d = _table(6, 400, 6)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("s", x, d, n_dec=3, v_max=3)
+            await srv.query("s", "PR", tol=1e-4, max_features=4)
+            r2 = await srv.query("s", "PR", tol=np.float32(1e-4),
+                                 max_features=np.int64(4))
+            assert srv.stats["cache_hits"] == 1
+            assert len(srv._cache) == 1
+            assert r2.reduct
+
+    asyncio.run(drive())
+
+
+def test_stale_eviction_uses_per_dataset_index():
+    """A merge evicts exactly the updated dataset's superseded entries; the
+    other dataset's cache and the index stay consistent."""
+    x1, d1 = _table(7, 500, 7)
+    x2, d2 = _table(8, 500, 7)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("a", x1[:400], d1[:400], n_dec=3, v_max=3)
+            await srv.submit("b", x2, d2, n_dec=3, v_max=3)
+            await asyncio.gather(srv.query("a", "PR"), srv.query("a", "SCE"),
+                                 srv.query("b", "PR"))
+            assert len(srv._cache) == 3
+            await srv.update("a", x1[400:], d1[400:])
+            await srv.query("a", "PR")
+            keys = set(srv._cache)
+            assert {k[0] for k in keys} == {"a", "b"}
+            # b untouched; a's stale-fingerprint entries gone
+            assert sum(1 for k in keys if k[0] == "b") == 1
+            assert sum(1 for k in keys if k[0] == "a") == 1
+            # index mirrors the cache exactly
+            indexed = {k for by_fp in srv._cache_index.values()
+                       for ks in by_fp.values() for k in ks}
+            assert indexed == keys
+
+    asyncio.run(drive())
+
+
+# ---------------------------------------------------------------------------
+# admission control + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_rejects_above_depth_and_recovers():
+    x, d = _table(9, 400, 6)
+
+    async def drive():
+        async with ReductServer(max_queue=3) as srv:
+            await srv.submit("s", x, d, n_dec=3, v_max=3)
+            # distinct params so dedup cannot absorb them; created together
+            # so all submits land before the scheduler drains the window
+            tasks = [asyncio.create_task(
+                srv.query("s", "PR", max_features=i + 1)) for i in range(5)]
+            done = await asyncio.gather(*tasks, return_exceptions=True)
+            rejected = [r for r in done if isinstance(r, ServerOverloaded)]
+            served = [r for r in done if not isinstance(r, Exception)]
+            assert len(rejected) == 2 and len(served) == 3
+            assert srv.stats["rejected"] == 2
+            # queue drained: the server admits again
+            r = await srv.query("s", "SCE")
+            assert r.reduct
+            assert srv.metrics.counters["rejected"] == 2
+
+    asyncio.run(drive())
+
+
+def test_stop_fails_queued_requests():
+    """stop() drains the queue and fails pending futures with a clear
+    RuntimeError instead of leaving them hanging forever."""
+    x, d = _table(10, 300, 5)
+
+    async def drive():
+        srv = ReductServer()
+        await srv.start()
+        await srv.submit("s", x, d, n_dec=3, v_max=3)
+        t1 = asyncio.create_task(srv.query("s", "PR"))
+        t2 = asyncio.create_task(srv.query("s", "SCE"))
+        await asyncio.sleep(0)   # both enqueue; scheduler not yet dispatched
+        await srv.stop()
+        for t in (t1, t2):
+            with pytest.raises(RuntimeError, match="server stopped"):
+                await t
+        # queries during/after stop are refused, not hung
+        with pytest.raises(RuntimeError):
+            await srv.query("s", "PR")
+
+    asyncio.run(drive())
+
+
+def test_metrics_timing_and_summary_shape():
+    x, d = _table(11, 300, 5)
+
+    async def drive():
+        async with ReductServer() as srv:
+            await srv.submit("s", x, d, n_dec=3, v_max=3)
+            await asyncio.gather(srv.query("s", "PR"), srv.query("s", "SCE"))
+            s = srv.summary()
+            for k in ("completed", "engine_dispatches", "qps_sustained",
+                      "mean_batch_occupancy", "queue_wait_p50_s",
+                      "latency_p99_s", "queries", "engine_runs"):
+                assert k in s
+            assert s["completed"] == 2
+            req = srv.requests[-1]
+            assert req.timing.t_done >= req.timing.t_start >= \
+                req.timing.t_enqueue > 0.0
+            assert req.latency_s == pytest.approx(req.timing.service_s)
+
+    asyncio.run(drive())
