@@ -1,0 +1,175 @@
+"""Chaos benchmark: what failures actually cost with the §3.10 layer on.
+
+Two recovery costs, measured (and their cheap alternative asserted):
+
+* **refold vs rebuild** — losing 1 of S data shards costs re-folding that
+  shard's lineage (``O(rows/S)``) plus one S-way re-merge; the naive
+  answer is a full from-scratch rebuild (``O(rows)``).  The bench times
+  both on the same sharded build path (identical chunk shapes → identical
+  compiles) and asserts the recovered granularity is bitwise identical to
+  the unfailed one — the §3.10 parity contract, not just a speedup claim.
+* **restart warm vs cold** — restart-to-first-answer with a durable
+  checkpoint (restore handles + warm ``repair_reduce``) vs a cold process
+  (rebuild granularity + cold greedy reduction).  Parity of the answer is
+  asserted; the two spans are the availability gap a checkpoint buys.
+
+A third section drives the hardened server through an injected fault storm
+(transient dispatch faults + a checkpoint-write crash) and asserts the
+retry/stale layer absorbed every one of them — queries all answered, no
+client-visible error.
+
+Snapshot with ``python -m benchmarks.run --preset chaos`` →
+``benchmarks/BENCH_chaos.json`` (the CI smoke tier).
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+# Big enough that per-shard fold work dominates the fixed merge cost, small
+# enough for the CI smoke tier.
+N_ROWS, N_ATTRS, N_SHARDS, CHUNK_ROWS = 120_000, 24, 8, 4096
+
+
+def _stream():
+    from repro.data import TabularStream
+    return TabularStream(n_rows=N_ROWS, n_attrs=N_ATTRS, v_max=3, n_dec=2,
+                         distinct_fraction=0.05, seed=13)
+
+
+def chaos_refold_vs_rebuild() -> List[Dict]:
+    from repro.core.recovery import build_sharded, recover
+    from repro.service import granularity_fingerprint
+
+    src = _stream()
+    # warm-up build: compiles the fold/merge for these shapes (not timed)
+    unfailed = build_sharded(src, N_SHARDS, chunk_rows=CHUNK_ROWS)
+    fp = granularity_fingerprint(unfailed.merged)
+
+    t0 = time.perf_counter()
+    rebuilt = build_sharded(src, N_SHARDS, chunk_rows=CHUNK_ROWS)
+    rebuild_s = time.perf_counter() - t0
+
+    failed = build_sharded(src, N_SHARDS, chunk_rows=CHUNK_ROWS)
+    failed.drop(N_SHARDS // 2)
+    t0 = time.perf_counter()
+    recovered = recover(failed, src)
+    refold_s = time.perf_counter() - t0
+
+    # parity first, speed second: recovery must be bitwise exact
+    assert recovered == [N_SHARDS // 2]
+    assert granularity_fingerprint(failed.merged) == fp
+    assert granularity_fingerprint(rebuilt.merged) == fp
+    ratio = rebuild_s / max(refold_s, 1e-9)
+    assert ratio >= 1.5, (
+        f"re-folding one of {N_SHARDS} shards only {ratio:.2f}x cheaper "
+        f"than a full rebuild ({refold_s:.3f}s vs {rebuild_s:.3f}s)")
+    return [{
+        "rows": N_ROWS, "shards": N_SHARDS, "chunk_rows": CHUNK_ROWS,
+        "refold_one_shard_s": round(refold_s, 3),
+        "full_rebuild_s": round(rebuild_s, 3),
+        "rebuild_over_refold": round(ratio, 2),
+        "parity": "bitwise",
+    }]
+
+
+def chaos_restart_warm_vs_cold() -> List[Dict]:
+    from repro.service import ReductServer
+
+    src = _stream()
+    x, d = src.chunk(0, 40_000)
+
+    async def first_life(ckdir):
+        async with ReductServer(checkpoint_dir=ckdir) as srv:
+            await srv.submit("ds", x, d, n_dec=src.n_dec, v_max=src.v_max)
+            r = await srv.query("ds", delta="SCE")
+            # persist the warm fixed point (what the restart repairs from)
+            r = await asyncio.to_thread(srv.handle("ds").reduce, "SCE")
+            return r
+
+    async def restart(ckdir):
+        t0 = time.perf_counter()
+        async with ReductServer(checkpoint_dir=ckdir) as srv:
+            r = await srv.query("ds", delta="SCE")
+            span = time.perf_counter() - t0
+            return r, span, dict(srv.stats)
+
+    async def cold_process():
+        t0 = time.perf_counter()
+        async with ReductServer() as srv:
+            await srv.submit("ds", x, d, n_dec=src.n_dec, v_max=src.v_max)
+            r = await srv.query("ds", delta="SCE")
+            span = time.perf_counter() - t0
+            return r, span
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        # compile-warm everything once (not timed), then measure
+        r0 = asyncio.run(first_life(ckdir))
+        warm_r, warm_s, stats = asyncio.run(restart(ckdir))
+        cold_r, cold_s = asyncio.run(cold_process())
+
+    assert stats["restored_datasets"] == 1
+    assert stats["warm"] == 1, "first post-restart query must repair, not rebuild"
+    assert warm_r.reduct == r0.reduct, "restart changed the answer"
+    assert sorted(warm_r.reduct) == sorted(cold_r.reduct)
+    return [{
+        "rows": len(x), "measure": "SCE",
+        "restart_warm_first_answer_s": round(warm_s, 3),
+        "cold_first_answer_s": round(cold_s, 3),
+        "cold_over_warm": round(cold_s / max(warm_s, 1e-9), 2),
+        "restored": stats["restored_datasets"],
+        "parity": "reduct",
+    }]
+
+
+def chaos_fault_storm_absorbed() -> List[Dict]:
+    """Transient dispatch faults + a checkpoint crash, all absorbed: every
+    query answered, zero client-visible errors."""
+    from repro.service import FaultPlan, ReductServer, RetryPolicy
+
+    rng = np.random.default_rng(17)
+    x = rng.integers(0, 3, (20_000, 16)).astype(np.int32)
+    d = rng.integers(0, 2, (20_000,)).astype(np.int32)
+    plan = FaultPlan.parse("dispatch@1,dispatch@3,merge@1,checkpoint@1")
+
+    async def drive(ckdir):
+        async with ReductServer(
+                checkpoint_dir=ckdir, fault_plan=plan,
+                retry=RetryPolicy(base_delay_s=0.001),
+                serve_stale=True) as srv:
+            await srv.submit("ds", x[:10_000], d[:10_000], n_dec=2, v_max=3)
+            answered = 0
+            for i in range(4):
+                lo = 10_000 + i * 2500
+                await srv.update("ds", x[lo:lo + 2500], d[lo:lo + 2500])
+                r = await srv.query("ds", delta="PR")
+                answered += bool(r.reduct is not None)
+            return answered, dict(srv.stats), srv.checkpointer.failed_saves
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        answered, stats, failed_saves = asyncio.run(drive(ckdir))
+
+    faults_fired = len(plan.fired)
+    assert answered == 4, "a fault leaked to a client"
+    assert faults_fired >= 3, f"plan under-fired: {plan.fired}"
+    assert stats["retries"] >= 2
+    return [{
+        "queries": 4, "answered": answered,
+        "faults_fired": faults_fired,
+        "retries": stats["retries"],
+        "stale_served": stats["stale_served"],
+        "checkpoint_write_failures": failed_saves,
+        "client_errors": 0,
+    }]
+
+
+ALL_CHAOS_BENCHES = {
+    "chaos_refold_vs_rebuild": chaos_refold_vs_rebuild,
+    "chaos_restart_warm_vs_cold": chaos_restart_warm_vs_cold,
+    "chaos_fault_storm_absorbed": chaos_fault_storm_absorbed,
+}

@@ -38,11 +38,14 @@ PRESETS = {
     "service": ["service_incremental_vs_recompute"],
     "serve": ["serve_batched_vs_single_flight", "serve_dedup_and_admission"],
     "autotune": ["autotune_tile_selection", "autotune_dispatch_bound"],
+    "chaos": ["chaos_refold_vs_rebuild", "chaos_restart_warm_vs_cold",
+              "chaos_fault_storm_absorbed"],
 }
 
 
 def main() -> None:
     from .autotune_bench import ALL_AUTOTUNE_BENCHES
+    from .chaos_bench import ALL_CHAOS_BENCHES
     from .engine_bench import ALL_ENGINE_BENCHES
     from .ensemble_bench import ALL_ENSEMBLE_BENCHES
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
@@ -79,7 +82,7 @@ def main() -> None:
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
             **ALL_ENSEMBLE_BENCHES, **ALL_INGEST_BENCHES,
             **ALL_SERVICE_BENCHES, **ALL_SERVE_BENCHES,
-            **ALL_AUTOTUNE_BENCHES}
+            **ALL_AUTOTUNE_BENCHES, **ALL_CHAOS_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:

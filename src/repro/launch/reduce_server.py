@@ -19,6 +19,13 @@ queries land in one scheduler window and are served by stacked batched
 dispatch (§3.9); the closing metrics block shows batch occupancy, dedup
 hits, and sustained qps.  ``--serial`` runs the single-flight baseline
 instead; ``--max-queue`` bounds admission.
+
+Resilience (§3.10): ``--checkpoint-dir DIR`` makes the handle state
+durable — run once, kill it, run again with the same DIR and the dataset
+restores from the checkpoint (the first query is a warm repair, not a cold
+rebuild).  ``--fault-plan SPEC`` injects deterministic failures (e.g.
+``dispatch@1x2,merge@0``) which the retry/quarantine/stale layer absorbs;
+the closing resilience line counts what fired.
 """
 from __future__ import annotations
 
@@ -44,12 +51,20 @@ def main():
                     help="single-flight worker (the PR 5 baseline)")
     ap.add_argument("--max-queue", type=int, default=1024,
                     help="admission-control queue depth")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="durable DatasetHandle checkpoints (§3.10): restore "
+                         "on start, background save after merges, final "
+                         "blocking save at stop")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault schedule, e.g. "
+                         "'dispatch@1x2,merge@0,checkpoint@0' "
+                         "(see repro.service.faults)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
     from repro.core import plar_reduce
     from repro.data import scaled_paper_dataset
-    from repro.service import ReductServer
+    from repro.service import FaultPlan, ReductServer, RetryPolicy
 
     stream = scaled_paper_dataset(args.dataset, max_rows=args.rows,
                                   max_attrs=args.attrs)
@@ -62,11 +77,18 @@ def main():
     others = [m for m in ("PR", "SCE", "LCE", "CCE") if m != args.delta]
     client_measures = [others[i % len(others)] for i in range(args.clients)]
 
+    fault_plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+
     async def drive():
         async with ReductServer(batching=not args.serial,
-                                max_queue=args.max_queue) as srv:
-            await srv.submit("live", x[:half], d[:half],
-                             n_dec=stream.n_dec, v_max=stream.v_max)
+                                max_queue=args.max_queue,
+                                checkpoint_dir=args.checkpoint_dir,
+                                fault_plan=fault_plan,
+                                retry=RetryPolicy(),
+                                serve_stale=fault_plan is not None) as srv:
+            if "live" not in srv._handles:  # absent unless restored (§3.10)
+                await srv.submit("live", x[:half], d[:half],
+                                 n_dec=stream.n_dec, v_max=stream.v_max)
             events = []
 
             async def round_query(tag, rows):
@@ -130,6 +152,13 @@ def main():
               f"occupancy={metrics['mean_batch_occupancy']} "
               f"qps={metrics['qps_sustained']} "
               f"latency_p99={metrics['latency_p99_s']}s")
+        if args.checkpoint_dir or args.fault_plan:
+            print(f"resilience: restored={stats['restored_datasets']} "
+                  f"checkpoints={stats['checkpoints']} "
+                  f"retries={stats['retries']} "
+                  f"quarantined={stats['quarantined']} "
+                  f"stale_served={stats['stale_served']} "
+                  f"flushed={stats['flushed_batches']}")
         print(f"final reduct matches batch plar_reduce: "
               f"{out['reduct_matches_batch']}")
 

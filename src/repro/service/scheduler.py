@@ -1,4 +1,4 @@
-"""Multi-tenant batched dispatch for the reduct server (DESIGN.md §3.9).
+"""Multi-tenant batched dispatch for the reduct server (DESIGN.md §3.9/§3.10).
 
 The PR 5 worker was single-flight: one queue, one request per engine
 dispatch.  This scheduler replaces it with *cross-query batching* — the
@@ -25,8 +25,21 @@ reduction:
   serializing keeps the §3.7 coalescing window well-defined per dataset).
 * **Admission control** — the queue is bounded; over-capacity submits
   fail fast with :class:`ServerOverloaded` (raised by the server's
-  ``query``/``query_ensemble``, defined here with the scheduler because it
-  is the scheduler's capacity being protected).
+  ``query``/``query_ensemble``).
+
+Failure hardening (DESIGN.md §3.10): every engine dispatch and coalescing
+merge runs through :meth:`Scheduler._attempt` — fault-plan injection,
+optional timeout, and bounded exponential-backoff retry of *transient*
+errors (:func:`is_transient`).  Deterministic errors (``ValueError`` from a
+bad config) are never retried.  A query config that keeps failing is
+**quarantined**: after ``RetryPolicy.quarantine_after`` exhausted attempts
+its followers get a typed :class:`QueryPoisoned` immediately instead of
+re-running the dispatch or wedging the shared dedup future; the quarantine
+clears when the dataset's content changes (the merge may fix it).  With
+``serve_stale=True`` a failed dispatch degrades gracefully: the last
+known-good result for that config is served flagged ``stale=True`` instead
+of erroring.  A failed *stacked* dispatch falls back to per-member solo
+serves, so one poisoned member cannot take down its whole group.
 
 The scheduler runs as one asyncio task inside :class:`ReductServer`; all
 JAX work happens in ``asyncio.to_thread`` so the event loop keeps
@@ -35,32 +48,94 @@ admitting, deduplicating, and rejecting while engines run.
 from __future__ import annotations
 
 import asyncio
+import dataclasses
+import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.reduction import partition_reduce_params
 
-__all__ = ["Scheduler", "ServerOverloaded"]
+from .errors import QueryPoisoned, ServerOverloaded, ServerStopped
+from .faults import FaultInjected
+
+__all__ = ["Scheduler", "RetryPolicy", "ServerOverloaded", "is_transient"]
 
 
-class ServerOverloaded(RuntimeError):
-    """Raised by ``query``/``query_ensemble`` when the bounded request
-    queue is full: the submit fails fast instead of growing the queue
-    unboundedly (admission control, DESIGN.md §3.9)."""
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential-backoff retry for dispatches and merges.
+
+    ``max_attempts`` counts total tries (1 = no retry); backoff sleeps
+    ``base_delay_s · 2^i`` capped at ``max_delay_s`` between them — on the
+    dispatching worker thread, so the event loop keeps admitting.
+    ``timeout_s`` (None = off) bounds one attempt; a timed-out attempt
+    counts as transient.  NOTE: Python cannot preempt a running JAX
+    dispatch — a timed-out attempt's thread is abandoned to finish in the
+    background, so enable timeouts only where duplicated work is acceptable.
+    ``quarantine_after`` exhausted dispatch failures poison the query config
+    (:class:`QueryPoisoned` for followers) until the dataset's content
+    changes.
+    """
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.02
+    max_delay_s: float = 1.0
+    timeout_s: Optional[float] = None
+    quarantine_after: int = 2
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Transient (retry) vs deterministic (fail fast) classification.
+
+    Infrastructure-shaped failures — injected faults flagged transient,
+    timeouts, I/O errors — are worth retrying; ``ValueError``/``TypeError``
+    and friends are properties of the *query*, and retrying them only
+    burns engine time reproducing the same exception.
+    """
+    if isinstance(exc, FaultInjected):
+        return exc.transient
+    return isinstance(exc, (TimeoutError, ConnectionError, OSError))
+
+
+def _call_with_timeout(fn, timeout_s: Optional[float]):
+    """Run ``fn()`` with a wall-clock bound.  On timeout the worker thread
+    is abandoned (daemon) and ``TimeoutError`` raised — see RetryPolicy."""
+    if not timeout_s:
+        return fn()
+    box: Dict[str, Any] = {}
+    done = threading.Event()
+
+    def run():
+        try:
+            box["ok"] = fn()
+        except BaseException as e:
+            box["err"] = e
+        finally:
+            done.set()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    if not done.wait(timeout_s):
+        raise TimeoutError(f"dispatch exceeded timeout_s={timeout_s}")
+    if "err" in box:
+        raise box["err"]
+    return box["ok"]
 
 
 class _Work:
     """One dataset's share of a batching window: its requests (arrival
     order) and the update batches captured for its coalesced merge."""
 
-    __slots__ = ("dataset", "requests", "batches", "merge_error")
+    __slots__ = ("dataset", "requests", "batches", "merge_error", "merged")
 
     def __init__(self, dataset: str) -> None:
         self.dataset = dataset
         self.requests: List[Any] = []
         self.batches: List[Tuple[np.ndarray, np.ndarray]] = []
         self.merge_error: Optional[BaseException] = None
+        self.merged = False
 
 
 class Scheduler:
@@ -68,12 +143,53 @@ class Scheduler:
 
     ``batching=False`` degrades to the PR 5 single-flight worker — one
     request per window, solo dispatch — which is the benchmark baseline
-    (``benchmarks/serve_bench.py``).
+    (``benchmarks/serve_bench.py``).  ``retry``/``fault_plan``/
+    ``serve_stale`` are the §3.10 resilience knobs (module docstring).
     """
 
-    def __init__(self, server, *, batching: bool = True) -> None:
+    def __init__(self, server, *, batching: bool = True,
+                 retry: Optional[RetryPolicy] = None,
+                 fault_plan=None, serve_stale: bool = False) -> None:
         self.srv = server
         self.batching = batching
+        self.retry = retry or RetryPolicy()
+        self.fault_plan = fault_plan
+        self.serve_stale = serve_stale
+
+    # -- resilience primitives ----------------------------------------------
+
+    def _attempt(self, site: str, fn):
+        """Fault injection + timeout + bounded-backoff retry around one
+        dispatch or merge.  Transient failures retry up to
+        ``retry.max_attempts``; the last error (or the first deterministic
+        one) propagates to the caller's classification logic."""
+        delay = self.retry.base_delay_s
+        for attempt in range(self.retry.max_attempts):
+            try:
+                if self.fault_plan is not None:
+                    self.fault_plan.inject(site)
+                return _call_with_timeout(fn, self.retry.timeout_s)
+            except BaseException as e:
+                last_try = attempt + 1 >= self.retry.max_attempts
+                if last_try or not is_transient(e):
+                    raise
+                self.srv._bump("retries", 1)
+                time.sleep(delay)
+                delay = min(delay * 2, self.retry.max_delay_s)
+
+    def _dispatch_failed(self, qkey: tuple, exc: BaseException,
+                         stale_key: Optional[tuple]) -> Tuple[str, Any]:
+        """Post-mortem of an exhausted dispatch: record the failure toward
+        quarantine, then either degrade to the last known-good result
+        (flagged ``stale=True``) or surface the error."""
+        srv = self.srv
+        srv._record_failure(qkey, exc, self.retry.quarantine_after)
+        if self.serve_stale and stale_key is not None:
+            stale = srv._last_good_get(stale_key)
+            if stale is not None:
+                srv._bump("stale_served", 1)
+                return ("ok", dataclasses.replace(stale, stale=True))
+        return ("err", exc)
 
     # -- the worker loop ----------------------------------------------------
 
@@ -99,11 +215,13 @@ class Scheduler:
                     window.append(nxt)
             works = self._plan(window)
             await self._execute(works)
+            if any(w.merged for w in works):
+                self.srv._note_merged()
 
     def _shutdown(self, stop_marker: object, pending: List[Any]) -> None:
         """Drain the queue on stop: queued-but-unstarted requests fail fast
-        with ``RuntimeError("server stopped")`` instead of hanging forever
-        (their work will never run)."""
+        with :class:`ServerStopped` instead of hanging forever (their work
+        will never run)."""
         queue = self.srv._queue
         while True:
             try:
@@ -114,7 +232,7 @@ class Scheduler:
                 pending.append(nxt)
         for req in pending:
             if not req.future.done():
-                req.future.set_exception(RuntimeError("server stopped"))
+                req.future.set_exception(ServerStopped("server stopped"))
 
     # -- planning (event loop: may touch _pending without locks) ------------
 
@@ -161,7 +279,10 @@ class Scheduler:
     def _merge(self, work: _Work) -> None:
         """Coalesce one dataset's buffered update batches into ONE monoid
         merge, then evict the dataset's superseded cache entries (runs on a
-        worker thread; may overlap another dataset's engine dispatch)."""
+        worker thread; may overlap another dataset's engine dispatch).
+        Retried under the §3.10 policy: a transient fault mid-merge loses
+        nothing — the batches stay captured in this work item and the next
+        attempt re-folds them."""
         srv = self.srv
         if not work.batches:
             return
@@ -169,12 +290,15 @@ class Scheduler:
             handle = srv._handles[work.dataset]
             xs = np.concatenate([b[0] for b in work.batches])
             ds = np.concatenate([b[1] for b in work.batches])
-            handle.update(xs, ds)
+            self._attempt("merge", lambda: handle.update(xs, ds))
             srv._bump("merges", 1)
             srv._bump("coalesced_batches", len(work.batches))
+            work.merged = True
             # content moved on: superseded-fingerprint entries can never hit
-            # again — O(evicted) via the per-dataset fingerprint index
+            # again — O(evicted) via the per-dataset fingerprint index —
+            # and the new content gets a clean quarantine slate
             srv._evict_stale(work.dataset, handle.fingerprint)
+            srv._clear_failures(work.dataset)
         except BaseException as e:  # surfaced to every request of this work
             work.merge_error = e
 
@@ -209,6 +333,10 @@ class Scheduler:
                 srv._bump("cache_hits", 1)
                 outcome[req.rid] = ("ok", hit)
                 continue
+            poison = srv._poisoned(self._qkey(req))
+            if poison is not None:
+                outcome[req.rid] = ("err", poison)
+                continue
             params = dict(req.params)
             split = partition_reduce_params(req.delta, params)
             if split is None or not self.batching:
@@ -238,16 +366,26 @@ class Scheduler:
 
     # -- dispatch units ------------------------------------------------------
 
+    @staticmethod
+    def _qkey(req) -> tuple:
+        """Quarantine/last-good key: the query config *without* the content
+        fingerprint — a poisoned config stays poisoned across retries on the
+        same content, and the slate clears when content changes."""
+        return (req.dataset, req.delta, req.params, req.configs)
+
     def _serve_solo(self, handle, req, key, params) -> Tuple[str, Any]:
         """The PR 5 path: one query, one engine run (warm repair when the
         handle knows a previous result) — for queries the stacked engine
         cannot express, and every query of a ``batching=False`` server."""
         srv = self.srv
+        qkey = self._qkey(req)
         try:
-            result = handle.reduce(req.delta, **params)
+            result = self._attempt(
+                "dispatch", lambda: handle.reduce(req.delta, **params))
         except BaseException as e:
-            return ("err", e)
+            return self._dispatch_failed(qkey, e, qkey)
         srv._cache_put(key, result)
+        srv._last_good_put(qkey, result)
         req.warm = handle.last_was_warm
         req.prefix_kept = handle.last_prefix_kept
         req.batch_size = 1
@@ -259,7 +397,10 @@ class Scheduler:
     def _serve_group(self, handle, shared: dict, members, fp,
                      outcome: Dict[int, Tuple[str, Any]]) -> None:
         """One stacked ``reduce_many`` dispatch for a shared-knob group of
-        heterogeneous configs; results fan out to every deduped request."""
+        heterogeneous configs; results fan out to every deduped request.
+        If the stacked dispatch exhausts its retries, the group degrades to
+        per-member solo serves: one poisoned member costs its own
+        requesters, never the whole group."""
         srv = self.srv
         if len(members) == 1:
             # a lone config gains nothing from stacking: keep the PR 5 solo
@@ -279,11 +420,20 @@ class Scheduler:
                    for cfg, _p, _r in members]
         n_queries = sum(len(reqs) for _c, _p, reqs in members)
         try:
-            results, kept, was_warm = handle.reduce_many(queries, **shared)
-        except BaseException as e:
-            for _cfg, _params, reqs in members:
+            results, kept, was_warm = self._attempt(
+                "dispatch", lambda: handle.reduce_many(queries, **shared))
+        except BaseException:
+            # stacked path failed: serve members individually — each solo
+            # serve brings its own retry/quarantine/stale handling
+            for _cfg, params, reqs in members:
+                lead = reqs[0]
+                key = (lead.dataset, fp, lead.delta, lead.params)
+                out = self._serve_solo(handle, lead, key, params)
                 for req in reqs:
-                    outcome[req.rid] = ("err", e)
+                    req.warm = lead.warm
+                    req.prefix_kept = lead.prefix_kept
+                    req.batch_size = lead.batch_size
+                    outcome[req.rid] = out
             return
         srv._bump("engine_runs", 1)
         srv.metrics.observe_dispatch(n_queries)
@@ -291,6 +441,7 @@ class Scheduler:
                 members, results, kept, was_warm):
             key = (reqs[0].dataset, fp, reqs[0].delta, reqs[0].params)
             srv._cache_put(key, result)
+            srv._last_good_put(self._qkey(reqs[0]), result)
             srv._bump("warm" if warm else "cold", 1)
             for req in reqs:
                 req.warm = warm
@@ -305,6 +456,10 @@ class Scheduler:
         shared = dict(req.params)
         srv._bump("ensemble_queries", 1)
         srv._bump("ensemble_configs", len(req.configs))
+        qkey = self._qkey(req)
+        poison = srv._poisoned(qkey)
+        if poison is not None:
+            return ("err", poison)
 
         grid = [dict(items) for items in req.configs]
         keys = []
@@ -326,10 +481,12 @@ class Scheduler:
             results.append(hit)
         if misses:
             try:
-                fresh = handle.reduce_ensemble(
-                    [grid[j] for j in misses], **shared)
+                fresh = self._attempt(
+                    "dispatch",
+                    lambda: handle.reduce_ensemble(
+                        [grid[j] for j in misses], **shared))
             except BaseException as e:
-                return ("err", e)
+                return self._dispatch_failed(qkey, e, None)
             srv._bump("engine_runs", 1)
             srv.metrics.observe_dispatch(len(misses))
             for j, r in zip(misses, fresh):

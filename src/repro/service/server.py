@@ -40,9 +40,24 @@ restores the PR 5 single-flight worker (the benchmark baseline).
 
 Admission control: the queue depth is bounded (``max_queue``); when it is
 full, ``query``/``query_ensemble`` fail fast with
-:class:`~repro.service.scheduler.ServerOverloaded` instead of queueing
+:class:`~repro.service.errors.ServerOverloaded` instead of queueing
 unboundedly.  ``stop()`` fails queued-but-unstarted requests with
-``RuntimeError("server stopped")`` — futures never hang across shutdown.
+:class:`~repro.service.errors.ServerStopped` — futures never hang across
+shutdown — then **flushes** every buffered-but-unmerged update batch
+through one final coalesced merge per dataset (counted as
+``flushed_batches`` in :meth:`ReductServer.summary`), so accepted updates
+are never silently dropped by an orderly shutdown.
+
+Durability & resilience (DESIGN.md §3.10): with ``checkpoint_dir`` set,
+the server checkpoints its :class:`DatasetHandle` map — granularity
+arrays, content fingerprint, per-config reducts/Θ histories, shard lineage
+— after every ``checkpoint_every``-th merged window (background write) and
+once more, blocking, at ``stop()``.  A restarted server restores the
+newest committed step in :meth:`start` and answers its first query through
+the warm ``repair_reduce`` path.  ``retry``/``serve_stale``/``fault_plan``
+configure the scheduler's failure hardening (scheduler.py docstring);
+failures are surfaced through the typed
+:class:`~repro.service.errors.ServiceError` hierarchy.
 """
 from __future__ import annotations
 
@@ -56,8 +71,15 @@ import numpy as np
 
 from repro.core.reduction import ReductionResult, expand_ensemble_grid
 
+from .checkpoint import ServiceCheckpointer
+from .errors import (
+    QueryPoisoned,
+    ServerOverloaded,
+    ServerStopped,
+    ServiceError,
+)
 from .metrics import RequestTiming, ServiceMetrics
-from .scheduler import Scheduler, ServerOverloaded
+from .scheduler import RetryPolicy, Scheduler
 from .state import DatasetHandle
 
 __all__ = ["ReductServer", "ReduceRequest", "ServerOverloaded"]
@@ -117,12 +139,38 @@ class ReductServer:
     ``max_queue`` bounds the request queue (admission control);
     ``batching=False`` restores the PR 5 single-flight worker with dedup
     disabled — the serve-benchmark baseline.
+
+    Resilience knobs (DESIGN.md §3.10): ``checkpoint_dir`` enables durable
+    handle snapshots (restored on :meth:`start`, written after every
+    ``checkpoint_every``-th merged window and at :meth:`stop`, keep-N =
+    ``checkpoint_keep``); ``retry`` is the scheduler's
+    :class:`~repro.service.scheduler.RetryPolicy`; ``serve_stale=True``
+    degrades failed dispatches to the last known-good result flagged
+    ``stale=True``; ``fault_plan`` wires a deterministic
+    :class:`~repro.service.faults.FaultPlan` into every injection site.
     """
 
-    def __init__(self, *, max_queue: int = 1024,
-                 batching: bool = True) -> None:
+    def __init__(self, *, max_queue: int = 1024, batching: bool = True,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1, checkpoint_keep: int = 3,
+                 retry: Optional[RetryPolicy] = None,
+                 serve_stale: bool = False, fault_plan=None) -> None:
         self._max_queue = int(max_queue)
         self._batching = bool(batching)
+        self._checkpoint_dir = checkpoint_dir
+        self._checkpoint_every = max(1, int(checkpoint_every))
+        self._checkpoint_keep = int(checkpoint_keep)
+        self._retry = retry
+        self._serve_stale = bool(serve_stale)
+        self._fault_plan = fault_plan
+        self._ckpt: Optional[ServiceCheckpointer] = None
+        self._merges_since_ckpt = 0
+        # §3.10 failure bookkeeping, keyed by query config *without* the
+        # content fingerprint (scheduler._qkey): consecutive-failure counts,
+        # quarantined configs, and last known-good results for serve_stale
+        self._failures: Dict[tuple, int] = {}
+        self._quarantined: Dict[tuple, QueryPoisoned] = {}
+        self._last_good: Dict[tuple, ReductionResult] = {}
         # None marks a name reserved by an in-flight submit()
         self._handles: Dict[str, Optional[DatasetHandle]] = {}
         self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
@@ -148,28 +196,54 @@ class ReductServer:
         self.stats = {"queries": 0, "cache_hits": 0, "warm": 0, "cold": 0,
                       "merges": 0, "updates": 0, "coalesced_batches": 0,
                       "ensemble_queries": 0, "ensemble_configs": 0,
-                      "dedup_hits": 0, "rejected": 0, "engine_runs": 0}
+                      "dedup_hits": 0, "rejected": 0, "engine_runs": 0,
+                      "retries": 0, "quarantined": 0, "stale_served": 0,
+                      "flushed_batches": 0, "flush_failures": 0,
+                      "checkpoints": 0, "restored_datasets": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> "ReductServer":
         if self._worker is not None:
-            raise RuntimeError("server already started")
+            raise ServiceError("server already started")
+        if self._checkpoint_dir is not None:
+            self._ckpt = ServiceCheckpointer(
+                self._checkpoint_dir, keep=self._checkpoint_keep,
+                fault_plan=self._fault_plan)
+            try:
+                _step, restored = await asyncio.to_thread(self._ckpt.restore)
+            except FileNotFoundError:
+                pass  # cold start: no committed step yet
+            else:
+                for name, handle in restored.items():
+                    # live handles win over checkpointed state (a stop/start
+                    # cycle must not roll a dataset back)
+                    self._handles.setdefault(name, handle)
+                self._bump("restored_datasets", len(restored))
         self._queue = asyncio.Queue(maxsize=self._max_queue)
-        self._scheduler = Scheduler(self, batching=self._batching)
+        self._scheduler = Scheduler(
+            self, batching=self._batching, retry=self._retry,
+            fault_plan=self._fault_plan, serve_stale=self._serve_stale)
         self._worker = asyncio.create_task(self._scheduler.run(_STOP))
         return self
 
     async def stop(self) -> None:
-        """Stop the scheduler.  The window being dispatched completes; every
+        """Orderly shutdown.  The window being dispatched completes; every
         queued-but-unstarted request fails fast with
-        ``RuntimeError("server stopped")`` (futures never hang)."""
+        :class:`ServerStopped` (futures never hang).  Then buffered-but-
+        unmerged update batches are flushed through one final coalesced
+        merge per dataset (``flushed_batches``), and — when checkpointing —
+        a final blocking checkpoint makes the flushed state durable."""
         if self._worker is None:
             return
         self._stopping = True
         try:
             await self._queue.put(_STOP)
             await self._worker
+            await asyncio.to_thread(self._flush_pending)
+            if self._ckpt is not None:
+                await asyncio.to_thread(self._checkpoint_now)
+                await asyncio.to_thread(self._ckpt.wait)
         finally:
             self._worker = None
             self._queue = None
@@ -186,18 +260,36 @@ class ReductServer:
 
     async def submit(self, name: str, x=None, d=None, *, source=None,
                      n_dec: Optional[int] = None, v_max: Optional[int] = None,
-                     exact: bool = True, chunk_rows: int = 65536) -> int:
-        """Create a dataset; returns its content fingerprint."""
+                     exact: bool = True, chunk_rows: int = 65536,
+                     n_shards: Optional[int] = None) -> int:
+        """Create a dataset; returns its content fingerprint.
+
+        ``n_shards`` (requires ``source=``) builds through the lineage-
+        tracked sharded path (core/recovery.py): the handle records per
+        shard which source chunk ranges folded into it, so a lost shard is
+        rebuilt by re-folding only its own rows."""
         if name in self._handles:
             raise ValueError(f"dataset {name!r} already exists")
+        if self._checkpoint_dir is not None and "/" in name:
+            raise ValueError(
+                f"dataset name {name!r} must not contain '/' when "
+                f"checkpointing is enabled (names become npz key prefixes)")
         # reserve before awaiting: the to_thread suspension would otherwise
         # let a concurrent same-name submit pass the existence check too,
         # and the last writer would silently swallow the other's rows
         self._handles[name] = None
         try:
-            handle = await asyncio.to_thread(
-                DatasetHandle.create, x, d, source=source, n_dec=n_dec,
-                v_max=v_max, exact=exact, chunk_rows=chunk_rows)
+            if n_shards is not None:
+                if source is None:
+                    raise ValueError("n_shards requires source=")
+                handle = await asyncio.to_thread(
+                    DatasetHandle.create_sharded, source, n_shards,
+                    chunk_rows=chunk_rows, exact=exact,
+                    fault_plan=self._fault_plan)
+            else:
+                handle = await asyncio.to_thread(
+                    DatasetHandle.create, x, d, source=source, n_dec=n_dec,
+                    v_max=v_max, exact=exact, chunk_rows=chunk_rows)
         except BaseException:
             del self._handles[name]
             raise
@@ -294,9 +386,9 @@ class ReductServer:
 
     def _ensure_running(self) -> None:
         if self._stopping:
-            raise RuntimeError("server stopped")
+            raise ServerStopped("server stopped")
         if self._queue is None:
-            raise RuntimeError(
+            raise ServiceError(
                 "server not started (use 'async with' or start())")
 
     def _admit(self, req: ReduceRequest, dkey: Optional[tuple]) -> None:
@@ -350,3 +442,96 @@ class ReductServer:
             for fp in [f for f in by_fp if f != live_fp]:
                 for key in by_fp.pop(fp):
                     self._cache.pop(key, None)
+
+    # -- §3.10 failure bookkeeping (scheduler threads) ----------------------
+
+    def _poisoned(self, qkey: tuple) -> Optional[QueryPoisoned]:
+        """The quarantine exception for this query config, if poisoned."""
+        with self._lock:
+            return self._quarantined.get(qkey)
+
+    def _record_failure(self, qkey: tuple, exc: BaseException,
+                        quarantine_after: int) -> None:
+        """Count one exhausted dispatch failure; quarantine the config once
+        it has failed ``quarantine_after`` times (followers then get the
+        typed :class:`QueryPoisoned` without re-running the dispatch)."""
+        with self._lock:
+            n = self._failures.get(qkey, 0) + 1
+            self._failures[qkey] = n
+            if n >= quarantine_after and qkey not in self._quarantined:
+                self._quarantined[qkey] = QueryPoisoned(
+                    f"query {qkey[1]!r} on dataset {qkey[0]!r} quarantined "
+                    f"after {n} failed dispatches "
+                    f"({type(exc).__name__}: {exc}); quarantine clears when "
+                    f"the dataset's content changes",
+                    cause=exc, failures=n)
+                self.stats["quarantined"] = self.stats.get(
+                    "quarantined", 0) + 1
+
+    def _clear_failures(self, dataset: str) -> None:
+        """Content changed (merge landed): the failure may have been a
+        property of the old content — give the dataset's configs a clean
+        quarantine slate."""
+        with self._lock:
+            for d in (self._failures, self._quarantined):
+                for k in [k for k in d if k[0] == dataset]:
+                    del d[k]
+
+    def _last_good_put(self, qkey: tuple, result: ReductionResult) -> None:
+        with self._lock:
+            self._last_good[qkey] = result
+
+    def _last_good_get(self, qkey: tuple) -> Optional[ReductionResult]:
+        with self._lock:
+            return self._last_good.get(qkey)
+
+    # -- §3.10 durability (event loop + threads) ----------------------------
+
+    @property
+    def checkpointer(self) -> Optional[ServiceCheckpointer]:
+        return self._ckpt
+
+    def _note_merged(self) -> None:
+        """Called by the scheduler after a window that merged updates:
+        schedule a background checkpoint every ``checkpoint_every`` merged
+        windows (the serving path never waits on disk)."""
+        if self._ckpt is None:
+            return
+        self._merges_since_ckpt += 1
+        if self._merges_since_ckpt >= self._checkpoint_every:
+            self._checkpoint_now(blocking=False)
+
+    def _checkpoint_now(self, *, blocking: bool = True) -> None:
+        """Snapshot every live handle as one committed step (skips names
+        reserved by in-flight submits).  Write failures are absorbed by the
+        checkpointer (``failed_saves``/``last_error``) — durability must not
+        take the serving path down."""
+        if self._ckpt is None:
+            return
+        path = self._ckpt.save(dict(self._handles), blocking=blocking)
+        if path is not None:
+            self._bump("checkpoints", 1)
+        self._merges_since_ckpt = 0
+
+    def _flush_pending(self) -> None:
+        """One final coalesced merge per dataset for batches that were
+        buffered but never demanded by a query (stop() calls this): accepted
+        updates survive an orderly shutdown.  A failing dataset is counted
+        (``flush_failures``) and skipped — it must not block the others."""
+        for name in list(self._pending):
+            batches = self._pending.pop(name)
+            handle = self._handles.get(name)
+            if not batches or handle is None:
+                continue
+            try:
+                xs = np.concatenate([b[0] for b in batches])
+                ds = np.concatenate([b[1] for b in batches])
+                handle.update(xs, ds)
+            except BaseException:
+                self._bump("flush_failures", len(batches))
+                continue
+            self._bump("merges", 1)
+            self._bump("coalesced_batches", len(batches))
+            self._bump("flushed_batches", len(batches))
+            self._evict_stale(name, handle.fingerprint)
+            self._clear_failures(name)

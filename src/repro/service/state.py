@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.granularity import Granularity, fold_chunk, row_fingerprints
 from repro.core.measures import f32_threshold
+from repro.core.recovery import ShardLineage, ShardedBuild, build_sharded, recover
 from repro.core.reduction import (
     ReductionResult,
     expand_ensemble_grid,
@@ -46,6 +47,8 @@ from repro.core.reduction import (
     plar_reduce_ensemble,
     resolve_granularity,
 )
+
+from .errors import ShardLost
 
 __all__ = [
     "DatasetHandle",
@@ -128,8 +131,18 @@ def repair_reduce(gran: Granularity, prev_reduct: Sequence[int], *,
     reduction re-run once from the trimmed prefix; on stable streams the
     common case is exactly one engine seed + resume and one Θ(D|C)
     evaluation.
+
+    Adversarial previous reducts (a stale or corrupt checkpoint, §3.10) are
+    sanitized rather than handed to the engine: attributes outside
+    ``[0, n_attrs)`` and duplicates are dropped from the warm-start prefix
+    (first occurrence wins).  The result is still a valid reduct — the
+    warm start is only a hint; validation and the stopping rule run against
+    the *current* granularity either way.
     """
-    prev = [int(a) for a in prev_reduct]
+    seen: set = set()
+    prev = [int(a) for a in prev_reduct
+            if 0 <= int(a) < gran.n_attrs
+            and not (int(a) in seen or seen.add(int(a)))]
     if not prev:
         return plar_reduce(source=gran, delta=delta, **params), 0
 
@@ -229,6 +242,11 @@ class DatasetHandle:
     rows_absorbed: int = 0
     last_prefix_kept: int = 0
     last_was_warm: bool = False
+    # shard lineage (DESIGN.md §3.10): set by create_sharded(); persisted by
+    # service/checkpoint.py as replay metadata — a lost shard re-folds from
+    # its recorded chunk ranges instead of triggering a full rebuild
+    lineage: Optional[Tuple[ShardLineage, ...]] = None
+    _sharded: Optional[ShardedBuild] = None
     _results: Dict[tuple, ReductionResult] = dataclasses.field(
         default_factory=dict)
     _fp: Optional[int] = None  # fingerprint cache, invalidated by update()
@@ -253,6 +271,54 @@ class DatasetHandle:
             chunk_rows=chunk_rows)
         return cls(gran=gran, exact=exact,
                    rows_absorbed=int(gran.n_total))
+
+    @classmethod
+    def create_sharded(cls, source, n_shards: int, *,
+                       chunk_rows: int = 65536, exact: bool = True,
+                       fault_plan=None) -> "DatasetHandle":
+        """Build from a GranuleSource as ``n_shards`` lineage-tracked data
+        shards (:func:`~repro.core.recovery.build_sharded`).  The handle
+        serves reductions from the merged granularity exactly like
+        :meth:`create`, but keeps the per-shard granularities and their
+        :class:`~repro.core.recovery.ShardLineage` recipes alive so a lost
+        shard costs one re-fold (:meth:`recover_shards`), not a rebuild.
+        """
+        build = build_sharded(source, n_shards, chunk_rows=chunk_rows,
+                              exact=exact, fault_plan=fault_plan)
+        h = cls(gran=build.merged, exact=exact,
+                rows_absorbed=int(build.merged.n_total),
+                lineage=tuple(build.lineages))
+        h._sharded = build
+        return h
+
+    @property
+    def lost_shards(self) -> "list[int]":
+        return list(self._sharded.lost) if self._sharded is not None else []
+
+    def drop_shard(self, shard_index: int) -> None:
+        """Simulate shard loss (the chaos harness's shard_drop fault)."""
+        if self._sharded is None:
+            raise ShardLost(
+                "handle holds no sharded build (create_sharded required)",
+                shard_index=shard_index)
+        self._sharded.drop(shard_index)
+
+    def recover_shards(self, source) -> "list[int]":
+        """Re-fold every lost shard from its lineage and re-merge.
+
+        The recovered merged granularity is bitwise identical to the
+        pre-loss one (deterministic replay, §3.10), so the fingerprint —
+        and every cached reduct's validity — is unchanged; asserted by
+        tests/test_recovery.py.  Raises :class:`ShardLost` when the handle
+        has no lineage to replay from.
+        """
+        if self._sharded is None:
+            raise ShardLost("handle holds no shard lineage to recover from")
+        recovered = recover(self._sharded, source)
+        if recovered:
+            self.gran = self._sharded.merged
+            self._fp = None
+        return recovered
 
     @property
     def fingerprint(self) -> int:
@@ -303,6 +369,11 @@ class DatasetHandle:
         if folded is not self.gran:  # empty batches are identity
             self.gran = folded
             self._fp = None
+            # streamed rows are not replayable from the source lineage —
+            # once the handle absorbs online updates, durability comes from
+            # checkpoints (service/checkpoint.py), not shard re-folds
+            self._sharded = None
+            self.lineage = None
         self.n_updates += 1
         self.rows_absorbed += int(x.shape[0])
 

@@ -25,6 +25,8 @@ import os
 import shutil
 import threading
 import time
+import warnings
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -33,6 +35,22 @@ import numpy as np
 Pytree = Any
 
 _SENTINEL = "COMMITTED"
+
+# What a truncated/corrupt checkpoint surfaces as: a half-written npz is a
+# BadZipFile or EOFError, a clipped manifest a JSONDecodeError, a missing
+# array key a KeyError, a garbage header a ValueError/OSError.
+_CORRUPT_ERRORS = (OSError, EOFError, KeyError, ValueError,
+                   json.JSONDecodeError, zipfile.BadZipFile)
+
+
+def _atomic_write(path: str, writer) -> None:
+    """Crash-safe file write: ``writer(tmp_path)`` then atomic ``os.replace``.
+
+    A crash mid-write leaves only ``<path>.tmp`` — never a truncated file at
+    the final name — so a reader can trust any file that exists."""
+    tmp = path + ".tmp"
+    writer(tmp)
+    os.replace(tmp, path)
 
 
 def _flatten(tree: Pytree, prefix: str = "") -> Dict[str, Any]:
@@ -94,7 +112,13 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        # each file lands via its own tmp + os.replace: a crash at any point
+        # leaves either no file or a complete one, never a truncated npz
+        def dump_npz(p):
+            with open(p, "wb") as f:  # file object: savez must not append .npz
+                np.savez(f, **host)
+
+        _atomic_write(os.path.join(tmp, "arrays.npz"), dump_npz)
         manifest = {
             "step": step,
             "keys": sorted(host),
@@ -103,15 +127,25 @@ class CheckpointManager:
             "time": time.time(),
             "extra": extra,
         }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, _SENTINEL), "w") as f:
-            f.write("ok\n")
+
+        def dump_json(p):
+            with open(p, "w") as f:
+                json.dump(manifest, f)
+
+        _atomic_write(os.path.join(tmp, "manifest.json"), dump_json)
+        self._pre_commit(tmp)
+        _atomic_write(os.path.join(tmp, _SENTINEL),
+                      lambda p: open(p, "w").write("ok\n"))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
         self._gc()
         return final
+
+    def _pre_commit(self, tmp_dir: str) -> None:
+        """Hook between the array/manifest writes and the commit (sentinel +
+        rename).  Subclasses use it for fault injection: raising here aborts
+        the step with nothing committed, proving the atomicity contract."""
 
     def _gc(self):
         steps = self.all_steps()
@@ -132,19 +166,48 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int] = None, *, shardings: Optional[Pytree] = None
-                ) -> Tuple[int, Pytree, dict]:
-        """Returns (step, tree, extra).  `shardings` (same structure, leaves
-        NamedSharding or None) re-shards onto the current topology."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
+    def _load_step(self, step: int) -> Tuple[Dict[str, np.ndarray], dict]:
         path = self._path(step)
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        npz = np.load(os.path.join(path, "arrays.npz"))
-        flat = {k: npz[k] for k in manifest["keys"]}
+        with np.load(os.path.join(path, "arrays.npz")) as npz:
+            flat = {k: npz[k] for k in manifest["keys"]}
+        return flat, manifest
+
+    def restore(self, step: Optional[int] = None, *, shardings: Optional[Pytree] = None
+                ) -> Tuple[int, Pytree, dict]:
+        """Returns (step, tree, extra).  `shardings` (same structure, leaves
+        NamedSharding or None) re-shards onto the current topology.
+
+        With ``step=None`` (auto-pick), a truncated or corrupt step — partial
+        write that still got committed, bit rot, manual tampering — is
+        *skipped with a warning* and the next older committed step is tried,
+        so a restart degrades to slightly-older state instead of dying
+        mid-startup.  An explicitly requested ``step`` still raises: the
+        caller asked for that step specifically and silently substituting
+        another would be wrong.
+        """
+        if step is not None:
+            flat, manifest = self._load_step(step)
+        else:
+            candidates = self.all_steps()
+            if not candidates:
+                raise FileNotFoundError(
+                    f"no committed checkpoints in {self.directory}")
+            flat = manifest = None
+            for s in reversed(candidates):
+                try:
+                    flat, manifest = self._load_step(s)
+                    step = s
+                    break
+                except _CORRUPT_ERRORS as e:
+                    warnings.warn(
+                        f"skipping corrupt checkpoint {self._path(s)}: "
+                        f"{type(e).__name__}: {e}", stacklevel=2)
+            if flat is None:
+                raise FileNotFoundError(
+                    f"no readable checkpoints in {self.directory} "
+                    f"(all {len(candidates)} committed steps are corrupt)")
         tree = _unflatten(flat)
         if shardings is not None:
             flat_sh = _flatten(shardings)
