@@ -1,0 +1,201 @@
+"""Observability benchmark: tracer overhead + the traced chaos run.
+
+Two sections (DESIGN.md §3.11):
+
+* ``obs_tracer_overhead`` — the zero-overhead-when-disabled contract,
+  measured: per-span cost with the tracer disabled and enabled
+  (spans/sec), then the §3.9 serve firehose driven both ways.  The
+  disabled-mode overhead is asserted **deterministically**: measured
+  spans-per-query × measured disabled-span cost must be < 2% of the
+  firehose's mean per-query latency — a bound that does not depend on
+  run-to-run wall-clock noise the way an enabled-vs-disabled diff does.
+* ``obs_trace_chaos`` — PR 9's chaos machinery with the flight recorder
+  on: a sharded build loses a shard and recovers through lineage, a
+  fault plan fails a dispatch mid-serve, checkpoints land — and the
+  exported Perfetto JSON must contain spans from all four subsystems
+  (engine, scheduler, checkpoint, recovery) plus a flight-recorder dump
+  next to the checkpoints.  Chaos runs become debuggable, not just
+  survivable.
+
+Snapshot with ``python -m benchmarks.run --preset obs`` →
+``benchmarks/BENCH_obs.json``.
+"""
+from __future__ import annotations
+
+import asyncio
+import glob
+import json
+import os
+import time
+from typing import Dict, List
+
+from .engine_bench import _latent_table
+from .serve_bench import CLIENTS, N_ATTRS, N_LATENT, N_ROWS, ROUNDS, V_MAX
+
+# Disabled spans are nanoseconds each; a large loop count keeps the
+# per-span estimate stable against timer granularity.
+SPAN_LOOP = 200_000
+
+# The hard ceiling of the zero-overhead contract: tracing compiled out
+# (disabled) must cost < 2% of the serve firehose's per-query latency.
+OVERHEAD_CEILING = 0.02
+
+
+def _span_cost_s(enabled: bool) -> float:
+    """Per-span wall cost of ``with obs.span(...): pass`` (no attrs)."""
+    from repro import obs
+
+    tracer = obs.get_tracer()
+    was = tracer.enabled
+    (tracer.enable if enabled else tracer.disable)()
+    try:
+        t0 = time.perf_counter()
+        for _ in range(SPAN_LOOP):
+            with obs.span("bench.noop"):
+                pass
+        dt = time.perf_counter() - t0
+    finally:
+        tracer.enabled = was
+    return dt / SPAN_LOOP
+
+
+def _make_firehose():
+    from .serve_bench import _run_workload
+
+    tables, chunks = {}, {}
+    for i, name in enumerate(("A", "B")):
+        x, d = _latent_table(N_ROWS, N_ATTRS, N_LATENT, V_MAX, seed=41 + i)
+        base = N_ROWS // 2
+        tables[name] = (x, d, base)
+        step = (N_ROWS - base) // (ROUNDS + 1)
+        chunks[name] = [(x[base + r * step: base + (r + 1) * step],
+                         d[base + r * step: base + (r + 1) * step])
+                        for r in range(ROUNDS + 1)]
+    return lambda: _run_workload(True, tables, chunks)
+
+
+def obs_tracer_overhead() -> List[Dict]:
+    from repro import obs
+
+    tracer = obs.get_tracer()
+    disabled_s = _span_cost_s(enabled=False)
+    enabled_s = _span_cost_s(enabled=True)
+
+    firehose = _make_firehose()
+    n_queries = ROUNDS * len(CLIENTS)
+
+    tracer.disable()
+    _, span_off, _, _ = firehose()
+
+    tracer.enable()
+    tracer.clear()
+    recorded_before = tracer.recorded
+    _, span_on, _, _ = firehose()
+    spans_recorded = tracer.recorded - recorded_before
+    tracer.disable()
+
+    # the deterministic bound: what the *disabled* tracer costs the firehose
+    spans_per_query = spans_recorded / n_queries
+    per_query_s = span_off / n_queries
+    overhead_frac = spans_per_query * disabled_s / per_query_s
+    assert overhead_frac < OVERHEAD_CEILING, (
+        f"disabled-tracer overhead {overhead_frac:.4%} >= "
+        f"{OVERHEAD_CEILING:.0%} of per-query latency "
+        f"({spans_per_query:.0f} spans/query x {disabled_s * 1e9:.0f}ns "
+        f"vs {per_query_s * 1e3:.2f}ms/query)")
+
+    return [
+        {"probe": "span_disabled", "ns_per_span": round(disabled_s * 1e9, 1),
+         "spans_per_s": round(1.0 / disabled_s),
+         "firehose_s": round(span_off, 3), "spans_per_query": "-",
+         "overhead_pct": "-"},
+        {"probe": "span_enabled", "ns_per_span": round(enabled_s * 1e9, 1),
+         "spans_per_s": round(1.0 / enabled_s),
+         "firehose_s": round(span_on, 3),
+         "spans_per_query": round(spans_per_query, 1),
+         "overhead_pct": "-"},
+        {"probe": "disabled_overhead_bound", "ns_per_span": "-",
+         "spans_per_s": "-", "firehose_s": "-",
+         "spans_per_query": round(spans_per_query, 1),
+         "overhead_pct": round(overhead_frac * 100, 4)},
+    ]
+
+
+def obs_trace_chaos() -> List[Dict]:
+    """The PR 9 chaos run, flight-recorded end to end."""
+    import tempfile
+
+    from repro import obs
+    from repro.core.recovery import build_sharded, recover
+    from repro.data.pipeline import TabularStream
+    from repro.service import FaultPlan, ReductServer, RetryPolicy
+
+    stream = TabularStream(n_rows=6000, n_attrs=16, v_max=3, n_dec=2,
+                           relevance=3, seed=5)
+    tracer = obs.enable()
+    tracer.clear()
+    rows: List[Dict] = []
+    try:
+        with tempfile.TemporaryDirectory() as ckdir:
+            # shard 1 dies after the build; lineage refold recovers it
+            plan = FaultPlan.parse("shard_drop@0:1,dispatch@0")
+            build = build_sharded(stream, 4, chunk_rows=2048,
+                                  fault_plan=plan)
+            assert build.lost == [1]
+            recovered = recover(build, stream)
+
+            async def drive():
+                async with ReductServer(checkpoint_dir=ckdir,
+                                        fault_plan=plan,
+                                        retry=RetryPolicy(),
+                                        serve_stale=True) as srv:
+                    x, d = stream.table()
+                    half = len(x) // 2
+                    await srv.submit("live", x[:half], d[:half],
+                                     n_dec=stream.n_dec, v_max=stream.v_max)
+                    r1 = await srv.query("live", "SCE")   # dispatch@0 fires
+                    await srv.update("live", x[half:], d[half:])
+                    r2 = await srv.query("live", "SCE")   # merge + checkpoint
+                    return r1, r2, dict(srv.stats)
+
+            r1, r2, stats = asyncio.run(drive())
+            assert stats["retries"] >= 1, stats  # the dispatch fault fired
+            assert stats["checkpoints"] >= 1, stats
+
+            # the fault firing must have dumped the flight recorder
+            dumps = glob.glob(os.path.join(ckdir, "flightrec-*.json"))
+            assert dumps, f"no flight-recorder dump in {ckdir}"
+            with open(dumps[0]) as f:
+                dump_doc = json.load(f)
+            assert dump_doc["traceEvents"], "empty flight-recorder dump"
+
+            trace_path = os.path.join(ckdir, "chaos_trace.json")
+            tracer.export(trace_path)
+            with open(trace_path) as f:
+                doc = json.load(f)
+
+        events = doc["traceEvents"]
+        for ev in events:   # Chrome-trace schema validity, every event
+            assert {"name", "cat", "ph", "ts", "pid", "tid"} <= set(ev)
+            assert ev["ph"] in ("X", "i")
+            assert (ev["ph"] != "X") or "dur" in ev
+        cats = {ev["cat"] for ev in events}
+        need = {"engine", "scheduler", "checkpoint", "recovery"}
+        assert need <= cats, f"missing subsystems: {need - cats} (got {cats})"
+
+        by_cat = {c: sum(ev["cat"] == c for ev in events) for c in sorted(cats)}
+        rows.append({"check": "chaos_trace", "events": len(events),
+                     "subsystems": len(cats),
+                     "by_cat": json.dumps(by_cat),
+                     "recovered_shards": len(recovered),
+                     "dumps": len(dumps), "ok": True})
+    finally:
+        obs.disable()
+        obs.set_dump_dir(None)
+    return rows
+
+
+ALL_OBS_BENCHES = {
+    "obs_tracer_overhead": obs_tracer_overhead,
+    "obs_trace_chaos": obs_trace_chaos,
+}

@@ -29,6 +29,23 @@ def _print_rows(name: str, rows) -> None:
 
 # Named section bundles: ``--preset NAME`` runs the bundle and snapshots it
 # as benchmarks/BENCH_NAME.json (an implicit --tag NAME).
+def _environment() -> dict:
+    """The machine stamp on every BENCH_*.json snapshot: enough to tell
+    whether two snapshots in the perf trajectory are comparable."""
+    import datetime
+    import os
+
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
 PRESETS = {
     "engine": ["engine_host_vs_device"],
     "ensemble": ["ensemble_stacked_vs_sequential"],
@@ -40,6 +57,7 @@ PRESETS = {
     "autotune": ["autotune_tile_selection", "autotune_dispatch_bound"],
     "chaos": ["chaos_refold_vs_rebuild", "chaos_restart_warm_vs_cold",
               "chaos_fault_storm_absorbed"],
+    "obs": ["obs_tracer_overhead", "obs_trace_chaos"],
 }
 
 
@@ -50,6 +68,7 @@ def main() -> None:
     from .ensemble_bench import ALL_ENSEMBLE_BENCHES
     from .ingest_bench import ALL_INGEST_BENCHES, EXPLICIT_BENCHES
     from .kernel_bench import ALL_BENCHES
+    from .obs_bench import ALL_OBS_BENCHES
     from .paper_tables import ALL_TABLES
     from .serve_bench import ALL_SERVE_BENCHES
     from .service_bench import ALL_SERVICE_BENCHES
@@ -82,7 +101,8 @@ def main() -> None:
     jobs = {**ALL_TABLES, **ALL_BENCHES, **ALL_ENGINE_BENCHES,
             **ALL_ENSEMBLE_BENCHES, **ALL_INGEST_BENCHES,
             **ALL_SERVICE_BENCHES, **ALL_SERVE_BENCHES,
-            **ALL_AUTOTUNE_BENCHES, **ALL_CHAOS_BENCHES}
+            **ALL_AUTOTUNE_BENCHES, **ALL_CHAOS_BENCHES,
+            **ALL_OBS_BENCHES}
     # long-running sections run only when named, never via the no-arg path
     selectable = {**jobs, **EXPLICIT_BENCHES}
     if "--list" in argv:
@@ -133,6 +153,7 @@ def main() -> None:
         section_times.update({name: now for name in results})
         with open(snap, "w") as f:
             json.dump({"tag": tag, "unix_time": now,
+                       "environment": _environment(),
                        "section_times": section_times,
                        "sections": sections}, f, indent=2)
         print(f"written: {snap}")

@@ -66,6 +66,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from . import measures
 from .granularity import dyn_column_terms, ids_from_presence, presence_bitmap
 from .plan import (
@@ -529,6 +531,9 @@ def make_engine_step(delta: str, mode: str, backend: str, n_attrs: int,
 @lru_cache(maxsize=None)
 def _make_engine_step(delta, mode, backend, n_attrs, cap, m, v_max, tol,
                       tie_tol, shrink, max_sel, mp_chunk, ladder, selector):
+    # an lru miss here IS a new trace → a new XLA compile at first dispatch
+    obs.counter("plar_engine_step_factories_total",
+                "distinct single-step engine configs traced").inc()
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
                shrink, max_sel, mp_chunk, ladder, selector)
 
@@ -562,6 +567,9 @@ def make_engine_run(delta: str, mode: str, backend: str, n_attrs: int,
 @lru_cache(maxsize=None)
 def _make_engine_run(delta, mode, backend, n_attrs, cap, m, v_max, tol,
                      tie_tol, shrink, max_sel, mp_chunk, ladder, selector):
+    # an lru miss here IS a new trace → a new XLA compile at first dispatch
+    obs.counter("plar_engine_run_factories_total",
+                "distinct while_loop engine configs traced").inc()
     cfg = _Cfg(delta, mode, backend, n_attrs, cap, m, v_max, tol, tie_tol,
                shrink, max_sel, mp_chunk, ladder, selector)
 
@@ -640,25 +648,59 @@ def run_engine(runner, cap: int, n_attrs: int, valid, x, d, w, n,
     """
     import time
 
+    traces_before = _jit_cache_size(runner)
     t_loop = time.perf_counter()
-    if warm_start is not None:
-        assert not core, "warm_start replaces the core prefix"
-        forced = list(warm_start)
-        st = init_state_from_reduct(
-            runner, cap, n_attrs, valid, x, d, w, n, forced)
-        fin = jax.block_until_ready(
-            engine_resume(runner, st, x, d, w, n, theta_full))
-    else:
-        forced = list(core)
-        st = init_state(cap, n_attrs, valid)
-        fin = jax.block_until_ready(
-            runner(st, x, d, w, n, jnp.float32(theta_full),
-                   _forced_attrs(n_attrs, forced), jnp.int32(len(forced))))
-    loop_s = time.perf_counter() - t_loop
-    reduct, hist, iters, n_evals = unpack_result(fin, len(forced))
+    with obs.span("engine.dispatch", n_attrs=n_attrs, cap=cap,
+                  warm=warm_start is not None) as sp:
+        if warm_start is not None:
+            assert not core, "warm_start replaces the core prefix"
+            forced = list(warm_start)
+            st = init_state_from_reduct(
+                runner, cap, n_attrs, valid, x, d, w, n, forced)
+            fin = jax.block_until_ready(
+                engine_resume(runner, st, x, d, w, n, theta_full))
+        else:
+            forced = list(core)
+            st = init_state(cap, n_attrs, valid)
+            fin = jax.block_until_ready(
+                runner(st, x, d, w, n, jnp.float32(theta_full),
+                       _forced_attrs(n_attrs, forced), jnp.int32(len(forced))))
+        loop_s = time.perf_counter() - t_loop
+        reduct, hist, iters, n_evals = unpack_result(fin, len(forced))
+        traces_after = _jit_cache_size(runner)
+        compiled = (traces_before is not None
+                    and traces_after is not None
+                    and traces_after > traces_before)
+        sp.set(k=len(reduct), iterations=iters, compiled=compiled)
+    obs.counter("plar_engine_runs_total",
+                "engine while_loop dispatch sequences completed").inc()
+    if compiled:
+        obs.counter("plar_engine_compiles_total",
+                    "engine dispatches that paid a fresh trace/compile").inc()
+    obs.gauge("plar_engine_last_k",
+              "reduct size of the most recent engine run").set(len(reduct))
+    obs.gauge("plar_engine_last_iterations",
+              "greedy iterations of the most recent engine run").set(iters)
     n_bodies = len(reduct)
     per_body = loop_s / n_bodies if n_bodies else 0.0
+    if n_bodies:
+        obs.histogram("plar_engine_iteration_seconds",
+                      "loop-average seconds per executed engine loop body"
+                      ).observe(per_body)
     return reduct, hist, iters, n_evals, [per_body] * n_bodies
+
+
+def _jit_cache_size(runner) -> Optional[int]:
+    """Traced-executable count of a jitted callable, when the running jax
+    exposes it (``_cache_size``) — lets the dispatch span tell a compile
+    from a cache hit.  None when unavailable: never guess."""
+    probe = getattr(runner, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
 
 
 def unpack_result(fin: SelectionState, core_count: int):
@@ -869,6 +911,9 @@ def make_ensemble_run(mode: str, backend: str, n_cfgs: int, n_attrs: int,
 @lru_cache(maxsize=None)
 def _make_ensemble_run(mode, backend, n_cfgs, n_attrs, cap, m, v_max,
                        mp_chunk, ladder, selector):
+    # an lru miss here IS a new trace → a new XLA compile at first dispatch
+    obs.counter("plar_engine_ensemble_factories_total",
+                "distinct stacked-engine configs traced").inc()
     cfg = _EnsCfg(mode, backend, n_cfgs, n_attrs, cap, m, v_max, mp_chunk,
                   ladder, selector)
     coll = _LocalColl()
@@ -998,9 +1043,18 @@ def run_ensemble(runner, cap: int, n_attrs: int, valid, x, d,
     """
     import time
 
+    traces_before = _jit_cache_size(runner)
     t0 = time.perf_counter()
-    st = init_ensemble_state(cap, n_attrs, valid, ops.n_cfgs)
-    fin = jax.block_until_ready(runner(st, x, d, ops))
+    with obs.span("engine.dispatch_ensemble", configs=ops.n_cfgs,
+                  n_attrs=n_attrs, cap=cap) as sp:
+        st = init_ensemble_state(cap, n_attrs, valid, ops.n_cfgs)
+        fin = jax.block_until_ready(runner(st, x, d, ops))
+        traces_after = _jit_cache_size(runner)
+        sp.set(compiled=(traces_before is not None
+                         and traces_after is not None
+                         and traces_after > traces_before))
+    obs.counter("plar_engine_ensemble_runs_total",
+                "stacked-engine dispatches completed").inc()
     return fin, time.perf_counter() - t0
 
 

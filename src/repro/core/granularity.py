@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 __all__ = [
     "Granularity",
     "build_granularity",
@@ -360,15 +362,20 @@ def fold_chunk(acc: Optional[Granularity], xc, dc, *, n_dec: int, v_max: int,
     dc = jnp.asarray(dc, jnp.int32)
     if xc.shape[0] == 0:
         return acc
-    g = build_granularity(
-        xc, dc, n_dec=n_dec, v_max=v_max, exact=exact, seed=seed,
-        capacity=next_pow2(xc.shape[0]),
-    )
-    g = with_capacity(g, next_pow2(max(int(g.num), 1)))
-    if acc is None:
-        return g
-    acc = merge_granularity(acc, g, exact=exact, seed=seed)
-    return with_capacity(acc, next_pow2(max(int(acc.num), 1)))
+    with obs.span("pipeline.fold_chunk", rows=int(xc.shape[0]),
+                  fresh=acc is None) as sp:
+        g = build_granularity(
+            xc, dc, n_dec=n_dec, v_max=v_max, exact=exact, seed=seed,
+            capacity=next_pow2(xc.shape[0]),
+        )
+        g = with_capacity(g, next_pow2(max(int(g.num), 1)))
+        if acc is None:
+            sp.set(granules=int(g.num))
+            return g
+        acc = merge_granularity(acc, g, exact=exact, seed=seed)
+        acc = with_capacity(acc, next_pow2(max(int(acc.num), 1)))
+        sp.set(granules=int(acc.num))
+    return acc
 
 
 def regranulate(gran: Granularity, cols: jnp.ndarray, *, exact: bool = True, seed: int = 0) -> Granularity:

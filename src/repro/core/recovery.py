@@ -32,6 +32,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .granularity import (
     Granularity,
     fold_chunk,
@@ -154,16 +156,9 @@ def build_sharded(source, n_shards: int, *, chunk_rows: int = 65536,
         raise ValueError(f"n_shards must be ≥ 1, got {n_shards}")
     accs: List[Optional[Granularity]] = [None] * n_shards
     slices: List[List[ChunkSlice]] = [[] for _ in range(n_shards)]
-    for i in range(source.n_chunks(chunk_rows)):
-        xc, dc = source.chunk(i, chunk_rows)
-        n = xc.shape[0]
-        for s in range(n_shards):
-            lo, hi = s * n // n_shards, (s + 1) * n // n_shards
-            if hi > lo:
-                slices[s].append(ChunkSlice(i, lo, hi))
-                accs[s] = fold_chunk(accs[s], xc[lo:hi], dc[lo:hi],
-                                     n_dec=source.n_dec, v_max=source.v_max,
-                                     exact=exact)
+    with obs.span("recovery.build_sharded", n_shards=n_shards,
+                  chunks=source.n_chunks(chunk_rows)):
+        _build_folds(source, n_shards, chunk_rows, exact, accs, slices)
     if any(g is None for g in accs):
         raise ValueError("source yielded no rows for at least one data shard")
     lineages = [
@@ -181,17 +176,36 @@ def build_sharded(source, n_shards: int, *, chunk_rows: int = 65536,
     return build
 
 
+def _build_folds(source, n_shards: int, chunk_rows: int, exact: bool,
+                 accs: List[Optional[Granularity]],
+                 slices: List[List[ChunkSlice]]) -> None:
+    for i in range(source.n_chunks(chunk_rows)):
+        xc, dc = source.chunk(i, chunk_rows)
+        n = xc.shape[0]
+        for s in range(n_shards):
+            lo, hi = s * n // n_shards, (s + 1) * n // n_shards
+            if hi > lo:
+                slices[s].append(ChunkSlice(i, lo, hi))
+                accs[s] = fold_chunk(accs[s], xc[lo:hi], dc[lo:hi],
+                                     n_dec=source.n_dec, v_max=source.v_max,
+                                     exact=exact)
+
+
 def refold_shard(source, lineage: ShardLineage) -> Granularity:
     """Replay one shard's lineage: re-fold exactly the recorded chunk
     ranges.  Pure-``(seed, step)`` sources re-materialize the same rows, the
     fold hits the same jitted builds with the same static shapes, so the
     result is bitwise identical to the lost shard's granularity."""
     acc: Optional[Granularity] = None
-    for sl in lineage.slices:
-        xc, dc = source.chunk(sl.step, lineage.chunk_rows)
-        acc = fold_chunk(acc, xc[sl.lo:sl.hi], dc[sl.lo:sl.hi],
-                         n_dec=lineage.n_dec, v_max=lineage.v_max,
-                         exact=lineage.exact)
+    with obs.span("recovery.refold_shard", shard=lineage.shard_index,
+                  slices=len(lineage.slices)):
+        for sl in lineage.slices:
+            xc, dc = source.chunk(sl.step, lineage.chunk_rows)
+            acc = fold_chunk(acc, xc[sl.lo:sl.hi], dc[sl.lo:sl.hi],
+                             n_dec=lineage.n_dec, v_max=lineage.v_max,
+                             exact=lineage.exact)
+    obs.counter("plar_recovery_refolds_total",
+                "shard lineages replayed by refold_shard").inc()
     if acc is None:
         raise ValueError(
             f"shard {lineage.shard_index} lineage is empty — nothing to refold")
@@ -230,15 +244,19 @@ def recover(build: ShardedBuild, source, *, fault_plan=None) -> List[int]:
     failures converge as long as the plan is finite.
     """
     recovered: List[int] = []
-    while build.lost:
-        for s in list(build.lost):
-            g = refold_shard(source, build.lineages[s])
-            build.shards[s] = g
-            recovered.append(s)
-            if fault_plan is not None:
-                spec = fault_plan.fire("shard_drop")
-                if spec is not None:
-                    build.drop(spec.arg if spec.arg is not None else s)
-    build.merged = merge_shards(build.shards,
-                                exact=build.lineages[0].exact)
+    with obs.span("recovery.recover", lost=len(build.lost)) as sp:
+        while build.lost:
+            for s in list(build.lost):
+                g = refold_shard(source, build.lineages[s])
+                build.shards[s] = g
+                recovered.append(s)
+                if fault_plan is not None:
+                    spec = fault_plan.fire("shard_drop")
+                    if spec is not None:
+                        build.drop(spec.arg if spec.arg is not None else s)
+        build.merged = merge_shards(build.shards,
+                                    exact=build.lineages[0].exact)
+        sp.set(recovered=len(recovered))
+    obs.counter("plar_recovery_recovers_total",
+                "recover() calls that re-merged a sharded build").inc()
     return recovered

@@ -28,6 +28,8 @@ from typing import Dict, Iterator, List, Optional, Protocol, Sequence, Tuple, ru
 
 import numpy as np
 
+from repro import obs
+
 # Canonical generation block: tabular rows are generated (and cached) in
 # fixed blocks of this many rows, so ``chunk(step, chunk_rows)`` is a pure
 # function of ``(seed, step)`` for *every* chunk size — chunk boundaries
@@ -197,7 +199,9 @@ class TabularStream:
         if not 0 <= lo < self.n_rows:
             raise IndexError(
                 f"chunk step {step} out of range for {self.n_chunks(chunk_rows)} chunks")
-        return self._rows(lo, min(lo + chunk_rows, self.n_rows))
+        hi = min(lo + chunk_rows, self.n_rows)
+        with obs.span("pipeline.chunk", step=step, rows=hi - lo):
+            return self._rows(lo, hi)
 
     def chunks(self, chunk_rows: int = ROW_BLOCK) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         """All chunks in order (the streaming-ingestion driver input)."""

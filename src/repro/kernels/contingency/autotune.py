@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .model import (  # noqa: F401  (public re-exports: the constants' one home)
     LANE,
     SUBLANE,
@@ -133,21 +135,39 @@ def resolve_tiles(
             f"unknown tile selector: {mode!r} "
             f"(one of: {', '.join(SELECTOR_MODES)})")
     if mode == "pinned":
-        return _pinned_tiles(kernel)
+        tiles = _pinned_tiles(kernel)
+        obs.event("autotune.resolve", kernel=kernel, mode=mode,
+                  tiles=repr(tiles))
+        return tiles
     if mode == "heuristic":
         bk, bg = select_block_sizes(n_bins, g, m)
         if kernel == "sweep":
             from .sweep import DEFAULT_BC
 
-            return (DEFAULT_BC, bk, bg)
-        return (bk, bg)
+            tiles = (DEFAULT_BC, bk, bg)
+        else:
+            tiles = (bk, bg)
+        obs.event("autotune.resolve", kernel=kernel, mode=mode,
+                  tiles=repr(tiles))
+        return tiles
     # analytic: a persisted tuning for this (platform, kernel, shape bucket)
     # wins over the model — measured beats modeled when available.
     tuned = _disk_get(_disk_key(jax.default_backend(), kernel,
                                 shape_bucket(nc, g, n_bins, m)))
     if tuned is not None:
+        obs.counter("plar_autotune_disk_hits_total",
+                    "tile resolutions served from the persisted tuning"
+                    ).inc()
+        obs.event("autotune.resolve", kernel=kernel, mode="analytic",
+                  source="disk", tiles=repr(tuned))
         return tuned
-    return select_tiles(kernel, nc, g, n_bins, m, v_max=v_max, delta=delta)
+    obs.counter("plar_autotune_disk_misses_total",
+                "tile resolutions that fell through to the analytic model"
+                ).inc()
+    tiles = select_tiles(kernel, nc, g, n_bins, m, v_max=v_max, delta=delta)
+    obs.event("autotune.resolve", kernel=kernel, mode="analytic",
+              source="model", tiles=repr(tiles))
+    return tiles
 
 
 # ---------------------------------------------------------------------------
@@ -337,9 +357,13 @@ def autotune_block_sizes(
            candidates, refine, top_k)
     if key in _CACHE:
         _CACHE_STATS["hits"] += 1
+        obs.counter("plar_autotune_cache_hits_total",
+                    "autotune LRU hits").inc()
         _CACHE.move_to_end(key)
         return _CACHE[key]
     _CACHE_STATS["misses"] += 1
+    obs.counter("plar_autotune_cache_misses_total",
+                "autotune LRU misses (re-ranked/timed)").inc()
 
     m_pad = _round_up(max(m, 1), LANE)
     ranked = rank_tiles(kernel, nc, g, n_bins, m_pad, v_max=v_max,

@@ -26,13 +26,63 @@ restores from the checkpoint (the first query is a warm repair, not a cold
 rebuild).  ``--fault-plan SPEC`` injects deterministic failures (e.g.
 ``dispatch@1x2,merge@0``) which the retry/quarantine/stale layer absorbs;
 the closing resilience line counts what fired.
+
+Observability (§3.11): ``--metrics-port PORT`` serves the Prometheus text
+exposition (process + server registries) on ``/metrics``;
+``--stats-interval SECS`` prints a one-line registry snapshot to stderr
+every interval; ``--trace-out PATH`` enables the flight recorder and
+exports the Perfetto/Chrome-trace JSON on shutdown (open at
+https://ui.perfetto.dev).
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
 import json
+import sys
+import threading
 import time
+
+
+def _serve_metrics(port: int, registries):
+    """The Prometheus exposition on a daemon thread; returns the server."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    from repro import obs
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            body = obs.render_prometheus(extra=registries).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # stderr belongs to --stats-interval
+            pass
+
+    httpd = ThreadingHTTPServer(("", port), Handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    return httpd
+
+
+def _stats_reporter(interval: float, registries, stop: threading.Event):
+    """One-line merged registry snapshot to stderr every ``interval`` s."""
+    from repro import obs
+
+    def run():
+        while not stop.wait(interval):
+            snap = obs.get_registry().snapshot()
+            for reg in registries:
+                snap.update(reg.snapshot())
+            print(f"[stats] {json.dumps(snap, sort_keys=True)}",
+                  file=sys.stderr, flush=True)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
 
 
 def main():
@@ -59,12 +109,26 @@ def main():
                     help="deterministic fault schedule, e.g. "
                          "'dispatch@1x2,merge@0,checkpoint@0' "
                          "(see repro.service.faults)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the Prometheus text exposition (process + "
+                         "server registries) on this port at /metrics")
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    metavar="SECS",
+                    help="print a one-line registry snapshot to stderr "
+                         "every SECS seconds")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable flight-recorder tracing and export the "
+                         "Perfetto/Chrome-trace JSON here on shutdown")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.core import plar_reduce
     from repro.data import scaled_paper_dataset
     from repro.service import FaultPlan, ReductServer, RetryPolicy
+
+    if args.trace_out:
+        obs.enable()
 
     stream = scaled_paper_dataset(args.dataset, max_rows=args.rows,
                                   max_attrs=args.attrs)
@@ -79,13 +143,24 @@ def main():
 
     fault_plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
 
+    server = ReductServer(batching=not args.serial,
+                          max_queue=args.max_queue,
+                          checkpoint_dir=args.checkpoint_dir,
+                          fault_plan=fault_plan,
+                          retry=RetryPolicy(),
+                          serve_stale=fault_plan is not None)
+
+    httpd = None
+    if args.metrics_port is not None:
+        httpd = _serve_metrics(args.metrics_port, [server.registry])
+        print(f"[metrics] http://localhost:{args.metrics_port}/metrics",
+              file=sys.stderr, flush=True)
+    stats_stop = threading.Event()
+    if args.stats_interval:
+        _stats_reporter(args.stats_interval, [server.registry], stats_stop)
+
     async def drive():
-        async with ReductServer(batching=not args.serial,
-                                max_queue=args.max_queue,
-                                checkpoint_dir=args.checkpoint_dir,
-                                fault_plan=fault_plan,
-                                retry=RetryPolicy(),
-                                serve_stale=fault_plan is not None) as srv:
+        async with server as srv:
             if "live" not in srv._handles:  # absent unless restored (§3.10)
                 await srv.submit("live", x[:half], d[:half],
                                  n_dec=stream.n_dec, v_max=stream.v_max)
@@ -114,7 +189,18 @@ def main():
                 r = await round_query(f"update_{i + 1}", hi - lo)
             return r, events, dict(srv.stats), srv.metrics.summary()
 
-    final, events, stats, metrics = asyncio.run(drive())
+    try:
+        final, events, stats, metrics = asyncio.run(drive())
+    finally:
+        stats_stop.set()
+        if httpd is not None:
+            httpd.shutdown()
+        if args.trace_out:
+            tracer = obs.get_tracer()
+            tracer.export(args.trace_out)
+            print(f"[trace] {len(tracer.records())} spans -> "
+                  f"{args.trace_out} (open at https://ui.perfetto.dev)",
+                  file=sys.stderr, flush=True)
 
     # the from-scratch baseline the incremental path replaces
     t0 = time.perf_counter()

@@ -1,0 +1,384 @@
+"""Process-wide metrics registry: counters, gauges, histograms, exposition.
+
+Before this module every subsystem kept its own ad-hoc counters —
+``ServiceMetrics.counters``, the server's ``stats`` dict, the autotune
+``_CACHE_STATS`` pair, nothing at all for engine compiles — each with its
+own snapshot idiom.  The registry (DESIGN.md §3.11) is the one place they
+all land:
+
+* :class:`Counter` — monotonically increasing (``inc``);
+* :class:`Gauge`   — last-value (``set``/``inc``): ladder rung, final K,
+  queue depth;
+* :class:`Histogram` — fixed cumulative buckets + sum/count, for
+  latency-shaped values (per-iteration seconds, merge durations).
+
+``snapshot()`` renders everything as one flat dict (benchmarks, the CLI
+stats line); ``render_prometheus()`` emits the Prometheus text exposition
+format v0.0.4 that ``reduce_server --metrics-port`` serves.
+
+Everything is host-side plain Python guarded by one registry lock —
+instruments hold a reference to it, so an ``inc`` is a lock + int add.
+Like the tracer, never call these inside jitted code.
+
+Two scopes by convention:
+
+* the **process registry** (:func:`get_registry`) for process-global
+  subsystems: engine compiles, autotune caches, recovery, checkpoints,
+  fault injections;
+* **per-instance registries** for objects that exist many times per
+  process (each ``ReductServer``/``ServiceMetrics`` owns one), merged
+  into one exposition by :func:`render_prometheus` callers passing
+  ``extra=``.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from collections.abc import MutableMapping
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "CounterMap",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "counter",
+    "gauge",
+    "histogram",
+    "render_prometheus",
+]
+
+# Latency-shaped default buckets (seconds): 100 µs … 30 s, roughly ×2.5.
+DEFAULT_BUCKETS = (0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01,
+                   0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0)
+
+_NAME_OK = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*\Z")
+_NAME_FIX = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def sanitize(name: str) -> str:
+    """Prometheus-legal metric name (invalid chars → ``_``)."""
+    if _NAME_OK.match(name):
+        return name
+    fixed = _NAME_FIX.sub("_", name)
+    if not fixed or not _NAME_OK.match(fixed[0]):
+        fixed = "_" + fixed
+    return fixed
+
+
+class Counter:
+    """Monotonic counter.  ``inc(by)`` only; negative increments refused."""
+
+    __slots__ = ("name", "help", "_value", "_lock")
+    kind = "counter"
+
+    def __init__(self, name: str, help: str, lock: threading.Lock):
+        self.name = name
+        self.help = help
+        self._value = 0
+        self._lock = lock
+
+    def inc(self, by: int = 1) -> None:
+        if by < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (by={by})")
+        with self._lock:
+            self._value += by
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+    def set(self, value) -> None:
+        """Rebase to an absolute value (re-basing pre-existing counter dicts
+        like ServiceMetrics.counters needs assignment semantics).  Must not
+        go backwards — that would violate the counter contract scrapers
+        rely on."""
+        with self._lock:
+            if value < self._value:
+                raise ValueError(
+                    f"counter {self.name} cannot decrease "
+                    f"({self._value} -> {value})")
+            self._value = value
+
+
+class Gauge:
+    """Last-value instrument: ``set``, or ``inc`` with any sign."""
+
+    __slots__ = ("name", "help", "_value", "_lock")
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str, lock: threading.Lock):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = lock
+
+    def set(self, value) -> None:
+        with self._lock:
+            self._value = value
+
+    def inc(self, by=1) -> None:
+        with self._lock:
+            self._value += by
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Cumulative fixed-bucket histogram (the Prometheus shape).
+
+    ``observe(v)`` bumps every bucket with ``le ≥ v`` implicitly by
+    storing per-bucket counts and cumulating at render time — one int add
+    per observe, not len(buckets).
+    """
+
+    __slots__ = ("name", "help", "buckets", "_counts", "_sum", "_count",
+                 "_lock")
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, lock: threading.Lock,
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self.name = name
+        self.help = help
+        self.buckets: Tuple[float, ...] = tuple(sorted(buckets))
+        self._counts = [0] * (len(self.buckets) + 1)   # +1: the +Inf bucket
+        self._sum = 0.0
+        self._count = 0
+        self._lock = lock
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        # first bucket with le >= v (linear scan: bucket lists are short and
+        # latency values cluster low; bisect would pay more in call overhead)
+        i = 0
+        bs = self.buckets
+        n = len(bs)
+        while i < n and v > bs[i]:
+            i += 1
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def cumulative(self) -> List[Tuple[str, int]]:
+        """``[(le_label, cumulative_count), ...]`` ending with ``+Inf``."""
+        with self._lock:
+            counts = list(self._counts)
+        out, acc = [], 0
+        for b, c in zip(self.buckets, counts):
+            acc += c
+            out.append((_fmt_le(b), acc))
+        out.append(("+Inf", acc + counts[-1]))
+        return out
+
+
+def _fmt_le(b: float) -> str:
+    if b == int(b) and abs(b) < 1e15:
+        return str(int(b))
+    return repr(b)
+
+
+class MetricsRegistry:
+    """A namespace of instruments with one lock and one exposition.
+
+    ``counter/gauge/histogram`` are get-or-create: the same name always
+    returns the same instrument, and a kind clash raises — two subsystems
+    silently sharing a name under different types is a bug, not a merge.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, Any] = {}
+
+    def _get(self, name: str, kind, help: str, **kw):
+        name = sanitize(name)
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = kind(name, help, self._lock, **kw)
+                self._instruments[name] = inst
+            elif not isinstance(inst, kind):
+                raise ValueError(
+                    f"metric {name!r} already registered as "
+                    f"{inst.kind}, requested {kind.kind}")
+            return inst
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(name, Counter, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(name, Gauge, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(name, Histogram, help, buckets=buckets)
+
+    def instruments(self) -> List[Any]:
+        with self._lock:
+            return list(self._instruments.values())
+
+    def clear(self) -> None:
+        """Drop every instrument (tests only — production registries are
+        append-only)."""
+        with self._lock:
+            self._instruments.clear()
+
+    # -- views ---------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, float]:
+        """One flat dict: counters/gauges by name, histograms as
+        ``<name>_count`` / ``<name>_sum`` — the benchmark/CLI view."""
+        out: Dict[str, float] = {}
+        for inst in self.instruments():
+            if isinstance(inst, Histogram):
+                out[f"{inst.name}_count"] = inst.count
+                out[f"{inst.name}_sum"] = inst.sum
+            else:
+                out[inst.name] = inst.value
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format v0.0.4."""
+        lines: List[str] = []
+        for inst in self.instruments():
+            if inst.help:
+                lines.append(f"# HELP {inst.name} {inst.help}")
+            lines.append(f"# TYPE {inst.name} {inst.kind}")
+            if isinstance(inst, Histogram):
+                for le, c in inst.cumulative():
+                    lines.append(f'{inst.name}_bucket{{le="{le}"}} {c}')
+                lines.append(f"{inst.name}_sum {_fmt_value(inst.sum)}")
+                lines.append(f"{inst.name}_count {inst.count}")
+            else:
+                lines.append(f"{inst.name} {_fmt_value(inst.value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+class CounterMap(MutableMapping):
+    """``defaultdict(int)``-shaped facade over registry counters.
+
+    Pre-registry code treats its counters as plain dicts —
+    ``m["x"] += 1``, ``m.get("x", 0)``, ``dict(m)`` — and tests assert
+    those reads exactly.  This adapter keeps that surface byte-compatible
+    while backing every key with a registry :class:`Counter` (name =
+    ``prefix + key``), so the same bumps show up in ``snapshot()`` and the
+    Prometheus exposition for free.
+
+    Reads of unknown keys return 0 and register the counter (defaultdict
+    semantics); assignment goes through :meth:`Counter.set`, so the
+    monotonicity contract still holds.  Deletion is refused: registries
+    are append-only.
+    """
+
+    def __init__(self, registry: "MetricsRegistry", prefix: str = "",
+                 initial: Iterable[str] = (), help: str = "") -> None:
+        self._registry = registry
+        self._prefix = prefix
+        self._help = help
+        self._counters: Dict[str, Counter] = {}
+        for key in initial:
+            self._ensure(key)
+
+    def _ensure(self, key: str) -> Counter:
+        c = self._counters.get(key)
+        if c is None:
+            c = self._registry.counter(self._prefix + key, self._help)
+            self._counters[key] = c
+        return c
+
+    def __getitem__(self, key: str) -> int:
+        return self._ensure(key).value
+
+    def __setitem__(self, key: str, value) -> None:
+        self._ensure(key).set(value)
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("registry-backed counters cannot be deleted")
+
+    def __iter__(self):
+        return iter(list(self._counters))
+
+    def __len__(self) -> int:
+        return len(self._counters)
+
+    def __contains__(self, key) -> bool:
+        return key in self._counters
+
+    def get(self, key, default=0):
+        c = self._counters.get(key)
+        return c.value if c is not None else default
+
+    def copy(self) -> Dict[str, int]:
+        """A detached plain-dict snapshot (what ``dict.copy()`` gave)."""
+        return dict(self)
+
+    def __repr__(self) -> str:
+        return f"CounterMap({dict(self)!r})"
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    if math.isnan(f):
+        return "NaN"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+# ---------------------------------------------------------------------------
+# the process registry + conveniences
+# ---------------------------------------------------------------------------
+
+_REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide registry (engine, autotune, recovery, checkpoints,
+    faults).  Per-server counters live on the server's own registry and are
+    merged at exposition time (:func:`render_prometheus`)."""
+    return _REGISTRY
+
+
+def counter(name: str, help: str = "") -> Counter:
+    return _REGISTRY.counter(name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    return _REGISTRY.gauge(name, help)
+
+
+def histogram(name: str, help: str = "",
+              buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+    return _REGISTRY.histogram(name, help, buckets=buckets)
+
+
+def render_prometheus(
+        extra: Iterable[MetricsRegistry] = ()) -> str:
+    """The full exposition: the process registry plus any per-instance
+    registries (``reduce_server --metrics-port`` passes the live server's)."""
+    parts = [_REGISTRY.render_prometheus()]
+    parts.extend(r.render_prometheus() for r in extra)
+    return "".join(parts)

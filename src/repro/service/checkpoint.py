@@ -34,6 +34,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.granularity import Granularity
 from repro.core.recovery import ShardLineage
 from repro.core.reduction import ReductionResult
@@ -163,9 +164,14 @@ class _ServiceManager(CheckpointManager):
 
     def _write(self, step, host, extra):
         try:
-            return super()._write(step, host, extra)
+            with obs.span("checkpoint.write", step=int(step)):
+                return super()._write(step, host, extra)
         except BaseException as e:
             self.last_error = e
+            obs.event("checkpoint.write_failed", step=int(step),
+                      error=f"{type(e).__name__}: {e}")
+            obs.counter("plar_checkpoint_failed_total",
+                        "checkpoint writes that failed (absorbed)").inc()
             return ""
 
 
@@ -215,12 +221,15 @@ class ServiceCheckpointer:
         """
         tree: Dict[str, Any] = {}
         metas: Dict[str, Any] = {}
-        for name, handle in handles.items():
-            if handle is None:
-                continue
-            t, m = handle_to_state(handle)
-            tree[name] = t
-            metas[name] = m
+        with obs.span("checkpoint.snapshot", datasets=len(handles)):
+            for name, handle in handles.items():
+                if handle is None:
+                    continue
+                t, m = handle_to_state(handle)
+                tree[name] = t
+                metas[name] = m
+        obs.counter("plar_checkpoint_saves_total",
+                    "checkpoint steps staged for write").inc()
         if blocking:
             self._mgr.wait()  # never two writers racing in one directory
         self._harvest()  # a background failure from the previous save
@@ -244,9 +253,12 @@ class ServiceCheckpointer:
         start) and :class:`CheckpointCorrupt` when a step's arrays and
         metadata disagree.
         """
-        step, tree, extra = self._mgr.restore()
-        handles = {
-            name: handle_from_state(tree.get(name, {}), meta)
-            for name, meta in extra.get("datasets", {}).items()
-        }
+        with obs.span("checkpoint.restore"):
+            step, tree, extra = self._mgr.restore()
+            handles = {
+                name: handle_from_state(tree.get(name, {}), meta)
+                for name, meta in extra.get("datasets", {}).items()
+            }
+        obs.counter("plar_checkpoint_restores_total",
+                    "checkpoint restore calls that found a step").inc()
         return step, handles

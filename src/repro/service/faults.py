@@ -32,6 +32,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["FAULT_KINDS", "FaultInjected", "FaultSpec", "FaultPlan"]
 
 FAULT_KINDS = ("shard_drop", "merge", "dispatch", "checkpoint")
@@ -136,14 +138,24 @@ class FaultPlan:
         if one is scheduled for this occurrence, else None."""
         if kind not in FAULT_KINDS:
             raise ValueError(f"unknown fault site {kind!r}")
+        hit: Optional[FaultSpec] = None
         with self._lock:
             step = self._counters[kind]
             self._counters[kind] += 1
             for spec in self.specs:
                 if spec.kind == kind and spec.covers(step):
                     self.fired.append((kind, step))
-                    return spec
-        return None
+                    hit = spec
+                    break
+        if hit is not None:  # flight-recorder postmortem, outside the lock
+            obs.event("faults.fired", kind=kind, step=step,
+                      transient=hit.transient)
+            obs.counter("plar_faults_fired_total",
+                        "fault-plan injections that fired").inc()
+            obs.request_dump(f"fault-{kind}",
+                             meta={"kind": kind, "step": step,
+                                   "transient": hit.transient})
+        return hit
 
     def inject(self, kind: str) -> None:
         """Raise :class:`FaultInjected` when a fault is scheduled here."""

@@ -16,6 +16,12 @@ Two layers, deliberately small:
 Everything here is host-side plain Python: no JAX, no locks beyond what
 callers provide (the scheduler serializes engine dispatches; merge threads
 touch only counters, which are guarded by the server's cache lock).
+
+Since DESIGN.md §3.11 the counters and latency samples are backed by an
+:class:`repro.obs.MetricsRegistry` — per instance, because tests and
+benchmarks build many servers per process — so the same numbers that feed
+``summary()`` also render on the Prometheus exposition.  ``summary()``
+output is byte-compatible with the pre-registry version.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import collections
 import dataclasses
 import time
 from typing import Deque, Dict, List, Optional, Sequence
+
+from ..obs.registry import CounterMap, MetricsRegistry
 
 __all__ = ["RequestTiming", "ServiceMetrics", "percentile"]
 
@@ -87,26 +95,46 @@ def percentile(values: Sequence[float], q: float) -> float:
 class ServiceMetrics:
     """Aggregate serving metrics: latency percentiles, occupancy, counters.
 
-    ``observe(timing, batch_size)`` records one completed request;
+    ``observe(timing)`` records one completed request;
     ``observe_dispatch(n)`` records one engine dispatch serving ``n``
     queries (batch occupancy); counters are plain ``inc(name)`` bumps.
     ``summary()`` renders the whole thing as a flat dict for benchmarks,
     the CLI, and tests.
+
+    Pass ``registry=`` to land the counters/histograms on a shared
+    registry (the reduct server shares one with its ``stats``); by default
+    each instance owns a private one.
     """
 
-    def __init__(self, window: int = _WINDOW) -> None:
+    def __init__(self, window: int = _WINDOW,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         self._waits: Deque[float] = collections.deque(maxlen=window)
         self._latencies: Deque[float] = collections.deque(maxlen=window)
         self._occupancies: Deque[int] = collections.deque(maxlen=window)
-        self.counters: Dict[str, int] = collections.defaultdict(int)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.counters: Dict[str, int] = CounterMap(
+            self.registry, prefix="plar_service_",
+            initial=("completed", "engine_dispatches", "batched_queries",
+                     "dedup_hits", "rejected"))
+        self._h_wait = self.registry.histogram(
+            "plar_service_queue_wait_seconds",
+            "request queue wait (enqueue to scheduler pickup)")
+        self._h_latency = self.registry.histogram(
+            "plar_service_latency_seconds",
+            "end-to-end request latency (enqueue to done)")
+        self._g_occupancy = self.registry.gauge(
+            "plar_service_last_batch_occupancy",
+            "queries served by the most recent engine dispatch")
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
     # -- recording ----------------------------------------------------------
 
-    def observe(self, timing: RequestTiming, batch_size: int = 1) -> None:
+    def observe(self, timing: RequestTiming) -> None:
         self._waits.append(timing.queue_wait_s)
         self._latencies.append(timing.latency_s)
+        self._h_wait.observe(timing.queue_wait_s)
+        self._h_latency.observe(timing.latency_s)
         self.counters["completed"] += 1
         if self._t_first is None:
             self._t_first = timing.t_done
@@ -115,6 +143,7 @@ class ServiceMetrics:
     def observe_dispatch(self, n_queries: int) -> None:
         """One engine dispatch that served ``n_queries`` batched queries."""
         self._occupancies.append(int(n_queries))
+        self._g_occupancy.set(int(n_queries))
         self.counters["engine_dispatches"] += 1
         if n_queries > 1:
             self.counters["batched_queries"] += n_queries

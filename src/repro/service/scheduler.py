@@ -55,6 +55,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.reduction import partition_reduce_params
 
 from .errors import QueryPoisoned, ServerOverloaded, ServerStopped
@@ -174,6 +175,8 @@ class Scheduler:
                 if last_try or not is_transient(e):
                     raise
                 self.srv._bump("retries", 1)
+                obs.event("scheduler.retry", site=site, attempt=attempt + 1,
+                          error=f"{type(e).__name__}: {e}")
                 time.sleep(delay)
                 delay = min(delay * 2, self.retry.max_delay_s)
 
@@ -188,7 +191,11 @@ class Scheduler:
             stale = srv._last_good_get(stale_key)
             if stale is not None:
                 srv._bump("stale_served", 1)
+                obs.event("scheduler.stale_served", dataset=qkey[0],
+                          query=qkey[1])
                 return ("ok", dataclasses.replace(stale, stale=True))
+        obs.event("scheduler.dispatch_failed", dataset=qkey[0],
+                  query=qkey[1], error=f"{type(exc).__name__}: {exc}")
         return ("err", exc)
 
     # -- the worker loop ----------------------------------------------------
@@ -214,7 +221,9 @@ class Scheduler:
                         return
                     window.append(nxt)
             works = self._plan(window)
-            await self._execute(works)
+            with obs.span("scheduler.window", requests=len(window),
+                          datasets=len(works)):
+                await self._execute(works)
             if any(w.merged for w in works):
                 self.srv._note_merged()
 
@@ -290,7 +299,9 @@ class Scheduler:
             handle = srv._handles[work.dataset]
             xs = np.concatenate([b[0] for b in work.batches])
             ds = np.concatenate([b[1] for b in work.batches])
-            self._attempt("merge", lambda: handle.update(xs, ds))
+            with obs.span("scheduler.merge", dataset=work.dataset,
+                          batches=len(work.batches), rows=int(xs.shape[0])):
+                self._attempt("merge", lambda: handle.update(xs, ds))
             srv._bump("merges", 1)
             srv._bump("coalesced_batches", len(work.batches))
             work.merged = True
@@ -359,7 +370,7 @@ class Scheduler:
         for req in work.requests:
             req.timing.mark_done()
             req.latency_s = req.timing.service_s
-            srv.metrics.observe(req.timing, req.batch_size)
+            srv.metrics.observe(req.timing)
             srv.requests.append(req)
             results.append((req, outcome[req.rid]))
         return results
@@ -380,8 +391,10 @@ class Scheduler:
         srv = self.srv
         qkey = self._qkey(req)
         try:
-            result = self._attempt(
-                "dispatch", lambda: handle.reduce(req.delta, **params))
+            with obs.span("scheduler.dispatch", dataset=req.dataset,
+                          delta=req.delta, kind="solo"):
+                result = self._attempt(
+                    "dispatch", lambda: handle.reduce(req.delta, **params))
         except BaseException as e:
             return self._dispatch_failed(qkey, e, qkey)
         srv._cache_put(key, result)
@@ -420,8 +433,12 @@ class Scheduler:
                    for cfg, _p, _r in members]
         n_queries = sum(len(reqs) for _c, _p, reqs in members)
         try:
-            results, kept, was_warm = self._attempt(
-                "dispatch", lambda: handle.reduce_many(queries, **shared))
+            with obs.span("scheduler.dispatch", dataset=members[0][2][0]
+                          .dataset, kind="stacked", configs=len(members),
+                          queries=n_queries):
+                results, kept, was_warm = self._attempt(
+                    "dispatch",
+                    lambda: handle.reduce_many(queries, **shared))
         except BaseException:
             # stacked path failed: serve members individually — each solo
             # serve brings its own retry/quarantine/stale handling
@@ -481,10 +498,12 @@ class Scheduler:
             results.append(hit)
         if misses:
             try:
-                fresh = self._attempt(
-                    "dispatch",
-                    lambda: handle.reduce_ensemble(
-                        [grid[j] for j in misses], **shared))
+                with obs.span("scheduler.dispatch", dataset=req.dataset,
+                              kind="ensemble", configs=len(misses)):
+                    fresh = self._attempt(
+                        "dispatch",
+                        lambda: handle.reduce_ensemble(
+                            [grid[j] for j in misses], **shared))
             except BaseException as e:
                 return self._dispatch_failed(qkey, e, None)
             srv._bump("engine_runs", 1)

@@ -69,6 +69,7 @@ from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.reduction import ReductionResult, expand_ensemble_grid
 
 from .checkpoint import ServiceCheckpointer
@@ -192,14 +193,20 @@ class ReductServer:
         self._rid = 0
         self.requests: Deque[ReduceRequest] = collections.deque(
             maxlen=_REQUEST_LOG)
-        self.metrics = ServiceMetrics()
-        self.stats = {"queries": 0, "cache_hits": 0, "warm": 0, "cold": 0,
-                      "merges": 0, "updates": 0, "coalesced_batches": 0,
-                      "ensemble_queries": 0, "ensemble_configs": 0,
-                      "dedup_hits": 0, "rejected": 0, "engine_runs": 0,
-                      "retries": 0, "quarantined": 0, "stale_served": 0,
-                      "flushed_batches": 0, "flush_failures": 0,
-                      "checkpoints": 0, "restored_datasets": 0}
+        # one per-server registry (DESIGN.md §3.11) backs both the stats
+        # dict and the ServiceMetrics counters/histograms; reduce_server's
+        # --metrics-port merges it into the process exposition
+        self.registry = obs.MetricsRegistry()
+        self.metrics = ServiceMetrics(registry=self.registry)
+        self.stats = obs.CounterMap(
+            self.registry, prefix="plar_server_",
+            initial=("queries", "cache_hits", "warm", "cold",
+                     "merges", "updates", "coalesced_batches",
+                     "ensemble_queries", "ensemble_configs",
+                     "dedup_hits", "rejected", "engine_runs",
+                     "retries", "quarantined", "stale_served",
+                     "flushed_batches", "flush_failures",
+                     "checkpoints", "restored_datasets"))
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -207,6 +214,8 @@ class ReductServer:
         if self._worker is not None:
             raise ServiceError("server already started")
         if self._checkpoint_dir is not None:
+            # postmortems land next to the checkpoints (obs dump-on-failure)
+            obs.set_dump_dir(self._checkpoint_dir)
             self._ckpt = ServiceCheckpointer(
                 self._checkpoint_dir, keep=self._checkpoint_keep,
                 fault_plan=self._fault_plan)
@@ -324,6 +333,7 @@ class ReductServer:
             if fut is not None:  # in-flight dedup: ride the running query
                 self._bump("dedup_hits", 1)
                 self.metrics.inc("dedup_hits")
+                obs.event("scheduler.dedup", dataset=name, delta=delta)
                 return await asyncio.shield(fut)
         self._rid += 1
         req = ReduceRequest(
@@ -361,6 +371,7 @@ class ReductServer:
             if fut is not None:
                 self._bump("dedup_hits", 1)
                 self.metrics.inc("dedup_hits")
+                obs.event("scheduler.dedup", dataset=name, delta="<ensemble>")
                 return await asyncio.shield(fut)
         self._rid += 1
         req = ReduceRequest(
@@ -455,6 +466,7 @@ class ReductServer:
         """Count one exhausted dispatch failure; quarantine the config once
         it has failed ``quarantine_after`` times (followers then get the
         typed :class:`QueryPoisoned` without re-running the dispatch)."""
+        quarantined_now = False
         with self._lock:
             n = self._failures.get(qkey, 0) + 1
             self._failures[qkey] = n
@@ -467,6 +479,15 @@ class ReductServer:
                     cause=exc, failures=n)
                 self.stats["quarantined"] = self.stats.get(
                     "quarantined", 0) + 1
+                quarantined_now = True
+        if quarantined_now:  # outside the lock: dump serialization is slow
+            obs.event("server.quarantine", dataset=qkey[0], query=qkey[1],
+                      failures=n, error=f"{type(exc).__name__}: {exc}")
+            obs.request_dump(
+                f"quarantine-{qkey[0]}",
+                meta={"dataset": qkey[0], "query": repr(qkey[1]),
+                      "failures": n,
+                      "error": f"{type(exc).__name__}: {exc}"})
 
     def _clear_failures(self, dataset: str) -> None:
         """Content changed (merge landed): the failure may have been a
